@@ -1,0 +1,101 @@
+"""Hillclimb comparison: baseline vs tagged variant roofline terms.
+
+Usage:
+  PYTHONPATH=src:. python -m benchmarks.compare --arch mamba2-370m \
+      --shape train_4k [--mesh pod256]
+Prints one row per tag found for the cell with the three terms, the
+dominant term, and deltas vs the untagged baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.flops import model_flops, step_cost  # noqa: E402
+from benchmarks.roofline import HBM_BW, LINK_BW, PEAK_FLOPS  # noqa: E402
+
+
+def cell_terms(rec, causal_skip=False, overrides=None):
+    from repro.config import SHAPE_SUITE, get_config
+    import dataclasses
+
+    cfg = get_config(rec["arch"])
+    if overrides:
+        typed = {}
+        for k, v in overrides.items():
+            cur = getattr(cfg, k)
+            typed[k] = (str(v).lower() in ("1", "true", "yes")
+                        if isinstance(cur, bool) else type(cur)(v))
+        cfg = dataclasses.replace(cfg, **typed)
+    shape = next(s for s in SHAPE_SUITE if s.name == rec["shape"])
+    chips = rec["num_devices"]
+    cost = step_cost(cfg, shape, chips, causal_skip=causal_skip)
+    mf = model_flops(cfg, shape)
+
+    coll = rec["collectives"]["total_bytes"]
+    hlo_path = rec.get("hlo_path")
+    if hlo_path and os.path.exists(hlo_path):
+        from repro.launch.hlo_parse import collective_analysis, load_hlo
+        wa = collective_analysis(load_hlo(hlo_path))
+        coll = wa["total_wire_bytes"]
+        detail = wa["wire_bytes"]
+    else:
+        detail = rec["collectives"]["bytes"]
+    t = {
+        "compute": cost.flops / (chips * PEAK_FLOPS),
+        "memory": cost.hbm_bytes / HBM_BW,
+        "collective": coll / LINK_BW,
+    }
+    lb = max(t.values())
+    return {
+        **t, "dominant": max(t, key=t.get),
+        "roofline_frac": mf / (chips * PEAK_FLOPS * lb),
+        "coll_detail_gb": {k: round(v / 1e9, 1) for k, v in detail.items()
+                           if v},
+        "mem_gb": (rec["memory_analysis"]["argument_size_in_bytes"]
+                   + rec["memory_analysis"]["temp_size_in_bytes"]) / 2**30,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod256")
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    pattern = os.path.join(
+        args.dir, f"{args.mesh}--{args.arch}--{args.shape}*.json")
+    base = None
+    rows = []
+    for path in sorted(glob.glob(pattern)):
+        rec = json.load(open(path))
+        if rec.get("status") != "ok":
+            continue
+        tag = rec.get("tag", "") or "baseline"
+        causal_skip = tag in ("Q2", "Q3", "S2") or "cskip" in tag
+        terms = cell_terms(rec, causal_skip=causal_skip,
+                           overrides=rec.get("overrides"))
+        rows.append((tag, terms))
+        if tag == "baseline":
+            base = terms
+
+    for tag, t in rows:
+        d = ""
+        if base is not None and tag != "baseline":
+            d = (f"  Δcoll {t['collective'] / base['collective'] - 1:+.0%}"
+                 f"  Δfrac {t['roofline_frac'] / base['roofline_frac']:.2f}x")
+        print(f"{tag:10s} comp {t['compute']:.3e}  mem {t['memory']:.3e}  "
+              f"coll {t['collective']:.3e}  dom={t['dominant']:10s} "
+              f"frac={t['roofline_frac']:.3f}  devGB={t['mem_gb']:.1f}{d}")
+        print(f"           colls: {t['coll_detail_gb']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Paper Fig. 1: runtime of sequential vs parallel continuous-time MAP
+(Wiener velocity model, eqs. 52-54) as a function of the number of blocks T.
+
+Methods (paper section 5.1): sequential RTS, sequential two-filter,
+parallel RTS, parallel two-filter; T blocks x n=10 Euler substeps; mean
+runtime over 5 measured iterations after a warmup call.
+
+NOTE on this container: one CPU core executes the associative scan
+sequentially, so wall-clock parity (not speedup) is expected here; the
+span column reports the algorithmic depth (sequential combines on the
+critical path) which is what the GPU/TPU wall-clock follows (paper Fig. 1:
+log T vs linear T).  The same harness run on an accelerator reproduces the
+paper's separation directly.
+"""
+from __future__ import annotations
+
+import math
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import jax
+import jax.numpy as jnp
+
+
+def run(T_list=(128, 256, 512, 1024, 2048), nsub=10, mode="euler",
+        repeats=5, p0=1e-2):
+    from repro.configs.wiener_velocity import WienerVelocityConfig
+    from repro.core import (
+        grid_lqt_from_linear, parallel_rts, parallel_two_filter,
+        sequential_rts, sequential_two_filter, simulate_linear, time_grid,
+    )
+
+    wcfg = WienerVelocityConfig(p0=p0)
+    model = wcfg.model()
+    rows = []
+    for T in T_list:
+        N = T * nsub
+        ts = time_grid(wcfg.t0, wcfg.tf, N, dtype=jnp.float32)
+        _, y = simulate_linear(model, ts, jax.random.PRNGKey(0))
+        grid = grid_lqt_from_linear(model, ts, y)
+
+        methods = {
+            "seq_rts": jax.jit(lambda g: sequential_rts(g, mode).x),
+            "seq_tf": jax.jit(lambda g: sequential_two_filter(g, mode).x),
+            "par_rts": jax.jit(
+                lambda g: parallel_rts(g, nsub, mode).x),
+            "par_tf": jax.jit(
+                lambda g: parallel_two_filter(g, nsub, mode).x),
+        }
+        spans = {
+            "seq_rts": 2 * N, "seq_tf": 2 * N,
+            "par_rts": 4 * math.ceil(math.log2(T + 1)) + 2 * nsub,
+            "par_tf": 4 * math.ceil(math.log2(T + 1)) + 2 * nsub,
+        }
+        for name, fn in methods.items():
+            out = fn(grid)
+            out.block_until_ready()        # compile + warmup
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                fn(grid).block_until_ready()
+            dt = (time.perf_counter() - t0) / repeats
+            rows.append({
+                "name": f"fig1/{name}/T{T}",
+                "us_per_call": dt * 1e6,
+                "derived": f"span={spans[name]}",
+            })
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Paper Fig. 2: runtime of the iterated (5x) MAP estimator on the
+coordinated-turn model (eqs. 55-58), sequential vs parallel RTS backend.
+
+The paper excludes the two-filter smoother here (more expensive, section
+5.2); we do the same but keep it one flag away.  Span column as in fig1.
+"""
+from __future__ import annotations
+
+import math
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import jax
+import jax.numpy as jnp
+
+
+def run(T_list=(64, 128, 256, 512), nsub=10, mode="euler", repeats=5,
+        iterations=5, include_tf=False):
+    from repro.configs.coordinated_turn import CoordinatedTurnConfig
+    from repro.core import iterated_map, simulate_nonlinear, time_grid
+
+    ccfg = CoordinatedTurnConfig(iterations=iterations)
+    model = ccfg.model()
+    rows = []
+    methods = ["sequential_rts", "parallel_rts"]
+    if include_tf:
+        methods.append("parallel_two_filter")
+    for T in T_list:
+        N = T * nsub
+        ts = time_grid(ccfg.t0, ccfg.tf, N, dtype=jnp.float32)
+        _, y = simulate_nonlinear(model, ts, jax.random.PRNGKey(1))
+        for method in methods:
+            fn = jax.jit(lambda yy, m=method: iterated_map(
+                model, ts, yy, iterations=iterations, method=m,
+                nsub=nsub, mode=mode).x)
+            fn(y).block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                fn(y).block_until_ready()
+            dt = (time.perf_counter() - t0) / repeats
+            span = iterations * (
+                2 * N if method.startswith("seq")
+                else 4 * math.ceil(math.log2(T + 1)) + 2 * nsub)
+            rows.append({
+                "name": f"fig2/{method}/T{T}",
+                "us_per_call": dt * 1e6,
+                "derived": f"span={span}",
+            })
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

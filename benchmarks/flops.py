@@ -1,0 +1,191 @@
+"""Analytic FLOP / HBM-byte model for every dry-run cell.
+
+WHY THIS EXISTS: ``compiled.cost_analysis()`` counts ``while``-loop bodies
+ONCE, and this framework deliberately scans over layers (and attention /
+SSD chunks) to keep 60-layer compiles tractable -- so the XLA numbers
+undercount by ~num_layers x.  The roofline therefore uses this analytic
+model, which is VALIDATED against XLA on loop-free lowerings
+(``unroll_layers=True``, chunk sizes >= seq) in
+tests/test_roofline_model.py: agreement within ~15% on dense/GQA/MoE/SSM
+configs.  Collective bytes are NOT modelled here -- they come from the
+loop-aware structural HLO parse in launch/dryrun.py (measured, per cell).
+
+Conventions:
+* all counts are GLOBAL per step (divide by chip count for per-device);
+* a matmul of (m, k) x (k, n) counts 2 m k n flops;
+* backward = 2x forward; full-layer remat adds +1x forward for layers
+  under ``jax.checkpoint``;
+* the baseline chunked attention computes the full rectangular logits
+  (causal masking wastes ~half) -- ``causal_skip`` halves the logit term;
+* MoE compute is capacity-based: the dense (E, cap, D) buffers do the
+  padded work, so capacity (not routed tokens) is what burns flops.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.config import ModelConfig, ShapeConfig
+
+BYTES = {"bfloat16": 2, "float32": 4}
+
+
+@dataclasses.dataclass(frozen=True)
+class CostBreakdown:
+    flops: float              # global flops per step
+    weight_bytes: float       # per-device weight traffic per step
+    act_bytes: float          # per-device activation traffic per step
+    kv_bytes: float           # per-device attention KV traffic per step
+    flops_detail: dict
+
+    @property
+    def hbm_bytes(self) -> float:
+        return self.weight_bytes + self.act_bytes + self.kv_bytes
+
+
+def _attn_flops(cfg: ModelConfig, T: float, ctx: float,
+                causal_skip: bool) -> dict:
+    hd = cfg.hd
+    proj = 2 * T * cfg.d_model * hd * (2 * cfg.num_heads
+                                       + 2 * cfg.num_kv_heads)
+    eff_ctx = min(ctx, cfg.window) if cfg.window else ctx
+    # triangular schedule halves the causal self-attention logit sweep
+    logits_ctx = eff_ctx * (0.5 if causal_skip else 1.0)
+    score_pv = 4 * T * logits_ctx * cfg.num_heads * hd
+    return {"attn_proj": proj, "attn_score_pv": score_pv}
+
+
+def _ssm_flops(cfg: ModelConfig, T: float, seq: float) -> dict:
+    D = cfg.d_model
+    din = cfg.ssm_inner
+    gs = cfg.ssm_groups * cfg.ssm_state
+    H, P, S = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    Q = min(cfg.ssm_chunk, int(seq))
+    proj = 2 * T * D * (2 * din + 2 * gs + H) + 2 * T * din * D
+    conv = 2 * T * (din + 2 * gs) * cfg.ssm_conv
+    # chunked SSD: Gmat (2 T Q G S) + y_intra (2 T Q H P)
+    #             + elements/inter (2 * 2 T H P S)
+    ssd = (2 * T * Q * cfg.ssm_groups * S + 2 * T * Q * H * P
+           + 4 * T * H * P * S)
+    return {"ssm_proj": proj + conv, "ssm_scan": ssd}
+
+
+def _ffn_flops(cfg: ModelConfig, T: float) -> dict:
+    mults = 3 if cfg.mlp_type == "gated" else 2
+    if cfg.is_moe:
+        cap_tokens = min(cfg.moe_topk * cfg.moe_capacity_factor,
+                         float(cfg.moe_experts)) * T
+        return {
+            "moe_experts": 2 * cap_tokens * cfg.d_model * cfg.d_ff * mults,
+            "moe_router": 2 * T * cfg.d_model * cfg.moe_experts,
+        }
+    if cfg.mlp_type == "none" or cfg.d_ff == 0:
+        return {}
+    return {"mlp": 2 * T * cfg.d_model * cfg.d_ff * mults}
+
+
+def step_cost(cfg: ModelConfig, shape: ShapeConfig, chips: int,
+              causal_skip: bool = False,
+              attn_chunk: int = 512) -> CostBreakdown:
+    B, S = shape.global_batch, shape.seq_len
+    dt = BYTES[cfg.dtype]
+    L = cfg.num_layers
+
+    if shape.kind in ("train", "prefill"):
+        T = float(B) * S
+        ctx = float(S)
+    else:
+        T = float(B)
+        ctx = float(S)
+
+    per_layer: dict = {}
+    if cfg.mixer in ("attn", "hybrid"):
+        per_layer.update(_attn_flops(
+            cfg, T, ctx, causal_skip and shape.kind != "decode"))
+    if cfg.mixer in ("ssm", "hybrid"):
+        if shape.kind == "decode":
+            H, P, Ss = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+            per_layer.update({
+                "ssm_proj": 2 * T * cfg.d_model
+                * (2 * cfg.ssm_inner + 2 * cfg.ssm_groups * Ss + H)
+                + 2 * T * cfg.ssm_inner * cfg.d_model,
+                "ssm_scan": 4 * T * H * P * Ss})
+        else:
+            per_layer.update(_ssm_flops(cfg, T, ctx))
+    per_layer.update(_ffn_flops(cfg, T))
+    layer_fwd = float(sum(per_layer.values()))
+
+    head = 2 * T * cfg.d_model * cfg.padded_vocab
+    embed = 0.0  # gather, no flops
+
+    if shape.kind == "train":
+        # fwd + bwd(2x) + layer remat recompute (+ group recompute for
+        # sqrt remat, see ModelConfig.remat_group)
+        remat_factor = 3.0
+        if cfg.remat:
+            remat_factor += 1.0
+            if cfg.remat_group:
+                remat_factor += 1.0
+        stack = L * layer_fwd * remat_factor
+        head_total = 3.0 * head
+        opt = 15.0 * cfg.param_count()
+        total = stack + head_total + embed + opt
+    else:
+        stack = L * layer_fwd
+        extra = 0.0
+        if shape.kind == "prefill" and cfg.mixer in ("ssm", "hybrid"):
+            extra = L * _ssm_flops(cfg, T, ctx)["ssm_proj"] * 0.5  # replay
+        head_total = head if shape.kind == "decode" else \
+            2 * float(B) * cfg.d_model * cfg.padded_vocab
+        total = stack + head_total + extra
+
+    detail = {k: v * L for k, v in per_layer.items()}
+    detail["lm_head"] = head_total
+    detail["_layer_fwd_one"] = layer_fwd
+
+    # ---- per-device HBM traffic (coarse, documented) ----
+    # weights: sharded over the 16-way model axis, replicated over DP
+    # (dp_only policy replicates weights and spreads the batch instead).
+    model_par = 16 if (chips >= 16
+                       and cfg.parallel_policy != "dp_only") else 1
+    N = cfg.param_count()
+    weight_reads = N * dt / model_par
+    if shape.kind == "train":
+        # fwd + remat-fwd + bwd reads + updated write of bf16 params,
+        # plus AdamW m/v/master f32 read+write ZeRO-sharded over all chips
+        weight_traffic = 4.0 * weight_reads + 10.0 * N * 4 / chips
+    else:
+        weight_traffic = weight_reads
+
+    T_loc = T / max(1, chips // model_par)
+    act_traffic = 20.0 * T_loc * cfg.d_model * dt * L \
+        * (2.0 if shape.kind == "train" else 1.0)
+    kv_traffic = 0.0
+    if cfg.mixer in ("attn", "hybrid"):
+        eff_ctx = min(ctx, cfg.window) if cfg.window else ctx
+        kv_one = 2 * eff_ctx * cfg.num_kv_heads * cfg.hd * dt
+        if shape.kind == "decode":
+            B_loc = B / max(1, chips // model_par)
+            kv_traffic = L * B_loc * kv_one  # read cache once per step
+        else:
+            nq = max(1, int(S // attn_chunk))
+            B_loc = B / max(1, chips // model_par)
+            kv_traffic = L * B_loc * kv_one * nq \
+                * (2.0 if shape.kind == "train" else 1.0)
+
+    return CostBreakdown(
+        flops=float(total),
+        weight_bytes=float(weight_traffic),
+        act_bytes=float(act_traffic),
+        kv_bytes=float(kv_traffic),
+        flops_detail=detail,
+    )
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """The 6*N*D / 6*N_active*D reference (2*N*D for inference cells)."""
+    n = cfg.active_param_count()
+    tokens = (shape.global_batch * shape.seq_len
+              if shape.kind in ("train", "prefill")
+              else shape.global_batch)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens

@@ -1,0 +1,96 @@
+"""Kernel micro-benchmarks (reference paths on CPU; the Pallas kernels
+target TPU and are correctness-validated in interpret mode -- interpret
+timing is not meaningful, so this times the jnp reference lowering and
+reports the kernel's analytic VMEM/arithmetic profile as `derived`)."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, repeats=5):
+    out = fn(*args)
+    jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+        jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # lqt_combine: batched eq. (42)
+    from repro.core.types import LQTElement
+    from repro.core.combine import lqt_combine
+    for B, nx in [(1024, 4), (4096, 4), (1024, 8)]:
+        def psd():
+            A = rng.standard_normal((B, nx, nx))
+            return jnp.asarray(
+                np.einsum("bij,bkj->bik", A, A) / nx + 0.1 * np.eye(nx),
+                jnp.float32)
+        e1 = LQTElement(
+            jnp.asarray(rng.standard_normal((B, nx, nx)), jnp.float32),
+            jnp.asarray(rng.standard_normal((B, nx)), jnp.float32),
+            psd(),
+            jnp.asarray(rng.standard_normal((B, nx)), jnp.float32), psd())
+        us = _time(jax.jit(lqt_combine), e1, e1)
+        flops = B * (2 * nx ** 3 * 8)  # ~8 small matmuls + solve
+        rows.append({
+            "name": f"kern/lqt_combine/B{B}_nx{nx}",
+            "us_per_call": us,
+            "derived": f"gflops={flops / us / 1e3:.2f}",
+        })
+
+    # ssd chunked scan (jnp path; == kernel algorithm)
+    from repro.models.ssm import ssd_scan_jnp
+    for (b, L, H, P, S, Q) in [(2, 2048, 8, 64, 64, 128)]:
+        x = jnp.asarray(rng.standard_normal((b, L, H, P)), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.01, 0.1, (b, L, H)), jnp.float32)
+        A = -jnp.asarray(rng.uniform(0.5, 1.0, (H,)), jnp.float32)
+        Bm = jnp.asarray(rng.standard_normal((b, L, 1, S)), jnp.float32)
+        Cm = jnp.asarray(rng.standard_normal((b, L, 1, S)), jnp.float32)
+        D = jnp.ones((H,), jnp.float32)
+        fn = jax.jit(lambda *a: ssd_scan_jnp(*a, chunk=Q))
+        us = _time(fn, x, dt, A, Bm, Cm, D)
+        toks = b * L
+        rows.append({
+            "name": f"kern/ssd/b{b}_L{L}_H{H}_P{P}_S{S}",
+            "us_per_call": us,
+            "derived": f"tokens_per_s={toks / (us / 1e6):.0f}",
+        })
+
+    # chunked attention (ref path of the flash kernel)
+    from repro.models.attention import chunked_mha
+    for (b, Hq, Hkv, L, D, ck) in [(1, 8, 2, 2048, 64, 256)]:
+        q = jnp.asarray(rng.standard_normal((b, Hq, L, D)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, Hkv, L, D)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, Hkv, L, D)), jnp.float32)
+        fn = jax.jit(lambda q, k, v: chunked_mha(
+            q, k, v, causal=True, window=None, chunk_q=ck, chunk_k=ck))
+        us = _time(fn, q, k, v)
+        fl = 4 * b * Hq * L * L * D
+        rows.append({
+            "name": f"kern/attn/b{b}_H{Hq}_L{L}",
+            "us_per_call": us,
+            "derived": f"gflops={fl / us / 1e3:.1f}",
+        })
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,185 @@
+"""Roofline analysis: join the dry-run artifacts with the analytic cost
+model and emit the per-(arch x shape x mesh) table.
+
+Terms (seconds per step, TPU v5e targets):
+  compute    = FLOPs / (chips * 197e12)           [bf16 peak]
+  memory     = per-device HBM bytes / 819e9
+  collective = per-device collective bytes / 50e9  [per-link ICI]
+
+FLOPs and HBM bytes come from benchmarks/flops.py (analytic, validated
+against XLA on loop-free lowerings -- see module docstring for why raw
+``cost_analysis()`` cannot be used under scan-over-layers); collective
+bytes are MEASURED from the compiled HLO with the loop-aware structural
+parse in launch/dryrun.py.
+
+Reported per cell:
+  * the three terms, the dominant one (= bottleneck),
+  * MODEL_FLOPS = 6*N(_active)*tokens (2*N for inference cells),
+  * ratio MODEL_FLOPS / analytic FLOPs (useful-compute fraction: catches
+    remat recompute, causal waste, MoE capacity padding),
+  * roofline fraction = MODEL_FLOPS / (chips * peak * max(terms)) -- the
+    MFU the step would reach running exactly at the roofline bound,
+  * a one-line note on what moves the dominant term.
+
+Usage: PYTHONPATH=src:. python -m benchmarks.roofline [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.flops import model_flops, step_cost  # noqa: E402
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / ICI link (conservative single-link)
+
+
+def _notes(dom, cfg, shape, rec):
+    coll = rec.get("collectives", {}).get("bytes", {})
+    biggest = max(coll, key=coll.get) if coll else "?"
+    if dom == "collective":
+        return (f"dominated by {biggest}; move TP reduces to "
+                f"reduce-scatter+all-gather (seq-parallel norms), bf16 "
+                f"collectives, or shrink TP degree for this size")
+    if dom == "memory":
+        if shape.kind == "decode":
+            return ("weight/KV streaming bound: batch more queries per "
+                    "weight read, quantise KV cache, or shrink TP to cut "
+                    "per-chip weight re-reads")
+        return ("activation traffic bound: fuse norms/elementwise, larger "
+                "attention chunks, fewer remat boundaries")
+    return ("compute bound: raise useful-flop fraction (causal-skip "
+            "schedule, less remat recompute, tighter MoE capacity)")
+
+
+def analyse(dryrun_dir: str, causal_skip_tags=("cskip",)):
+    from repro.config import SHAPE_SUITE, get_config
+
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") == "skipped":
+            rows.append({
+                "mesh": rec["mesh"], "arch": rec["arch"],
+                "shape": rec["shape"], "status": "skipped",
+                "note": rec["skip_reason"], "tag": rec.get("tag", ""),
+            })
+            continue
+        if rec.get("status") != "ok":
+            rows.append({
+                "mesh": rec["mesh"], "arch": rec["arch"],
+                "shape": rec["shape"], "status": "FAILED",
+                "note": rec.get("error", "")[:120],
+                "tag": rec.get("tag", ""),
+            })
+            continue
+        cfg = get_config(rec["arch"])
+        shape = next(s for s in SHAPE_SUITE if s.name == rec["shape"])
+        chips = rec["num_devices"]
+        causal_skip = rec.get("tag", "") in causal_skip_tags
+        cost = step_cost(cfg, shape, chips, causal_skip=causal_skip)
+        mf = model_flops(cfg, shape)
+
+        # prefer wire-byte analysis from the archived HLO (ring-algorithm
+        # costs per op kind); fall back to the dry-run's output-byte sums
+        coll_bytes = rec["collectives"]["total_bytes"]
+        coll_detail = rec["collectives"]["bytes"]
+        hlo_path = rec.get("hlo_path")
+        if hlo_path and os.path.exists(hlo_path):
+            try:
+                from repro.launch.hlo_parse import (
+                    collective_analysis, load_hlo)
+                wa = collective_analysis(load_hlo(hlo_path))
+                coll_bytes = wa["total_wire_bytes"]
+                coll_detail = wa["wire_bytes"]
+                rec["collectives"]["bytes"] = coll_detail
+            except Exception:
+                pass
+
+        t_comp = cost.flops / (chips * PEAK_FLOPS)
+        t_mem = cost.hbm_bytes / HBM_BW
+        t_coll = coll_bytes / LINK_BW
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        dom = max(terms, key=terms.get)
+        step_lb = max(terms.values())
+        frac = mf / (chips * PEAK_FLOPS * step_lb) if step_lb else 0.0
+
+        rows.append({
+            "mesh": rec["mesh"], "arch": rec["arch"],
+            "shape": rec["shape"], "status": "ok",
+            "tag": rec.get("tag", ""),
+            "chips": chips,
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll,
+            "dominant": dom,
+            "model_flops": mf,
+            "analytic_flops": cost.flops,
+            "useful_frac": mf / cost.flops,
+            "roofline_frac": frac,
+            "hlo_flops_per_dev": rec["cost_analysis"].get("flops", 0),
+            "coll_bytes": coll_bytes,
+            "mem_gb_per_dev": (
+                rec["memory_analysis"].get("argument_size_in_bytes", 0)
+                + rec["memory_analysis"].get("temp_size_in_bytes", 0))
+                / 2**30,
+            "note": _notes(dom, cfg, shape, rec),
+        })
+    return rows
+
+
+def to_markdown(rows) -> str:
+    hdr = ("| mesh | arch | shape | tag | comp s | mem s | coll s | "
+           "dominant | useful | roofline | dev GB | note |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(
+                f"| {r['mesh']} | {r['arch']} | {r['shape']} | "
+                f"{r.get('tag','')} | - | - | - | {r['status']} | - | - |"
+                f" - | {r['note']} |\n")
+            continue
+        out.append(
+            f"| {r['mesh']} | {r['arch']} | {r['shape']} | {r['tag']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_frac']:.2f} | {r['roofline_frac']:.3f} "
+            f"| {r['mem_gb_per_dev']:.1f} | {r['note'][:70]} |\n")
+    return "".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--out", default="artifacts/roofline.md")
+    ap.add_argument("--csv", default="artifacts/roofline.csv")
+    args = ap.parse_args()
+    rows = analyse(args.dir)
+    md = to_markdown(rows)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(md)
+    import csv as _csv
+    keys = ["mesh", "arch", "shape", "tag", "status", "chips",
+            "t_compute_s", "t_memory_s", "t_collective_s", "dominant",
+            "model_flops", "analytic_flops", "useful_frac",
+            "roofline_frac", "coll_bytes", "mem_gb_per_dev", "note"]
+    with open(args.csv, "w", newline="") as f:
+        w = _csv.DictWriter(f, fieldnames=keys, extrasaction="ignore")
+        w.writeheader()
+        w.writerows(rows)
+    print(md)
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    sk = sum(1 for r in rows if r["status"] == "skipped")
+    bad = sum(1 for r in rows if r["status"] == "FAILED")
+    print(f"# cells: {ok} ok, {sk} skipped, {bad} failed")
+
+
+if __name__ == "__main__":
+    main()

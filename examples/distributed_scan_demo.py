@@ -1,0 +1,62 @@
+"""Temporal parallelism across devices: the paper's scan, sharded in time.
+
+Forces 8 host devices, shards a T=512-block Kalman-Bucy element sequence
+over them, and runs the distributed suffix scan (local Blelloch scan +
+one all-gather of carries + local fix-up) -- the multi-pod decomposition
+of DESIGN.md S3.  Verifies exact agreement with the single-device scan.
+
+    PYTHONPATH=src python examples/distributed_scan_demo.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from functools import partial
+
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.wiener_velocity import WienerVelocityConfig
+from repro.core import (
+    distributed_scan, grid_lqt_from_linear, lqt_combine, simulate_linear,
+    suffix_scan, time_grid,
+)
+from repro.core.combine import value_as_element
+from repro.core.elements import discrete_block_elements, terminal_element
+from repro.core.types import LQTElement, ValueFn
+
+cfg = WienerVelocityConfig(p0=1.0)
+model = cfg.model()
+T, n = 512, 10
+ts = time_grid(cfg.t0, cfg.tf, T * n)
+_, y = simulate_linear(model, ts, jax.random.PRNGKey(0))
+grid = grid_lqt_from_linear(model, ts, y)
+
+blocks, _ = discrete_block_elements(grid, n)
+# fold the prior element into the last block so T stays device-divisible
+last = jax.tree_util.tree_map(lambda a: a[-1], blocks)
+folded = lqt_combine(last, terminal_element(grid))
+elems = jax.tree_util.tree_map(
+    lambda a, f: jnp.concatenate([a[:-1], f[None]], axis=0), blocks, folded)
+
+mesh = jax.make_mesh((8,), ("time",))
+spec = LQTElement(*(P("time"),) * 5)
+dist = jax.jit(shard_map(
+    partial(distributed_scan, lqt_combine, axis_name="time", reverse=True),
+    mesh=mesh, in_specs=(spec,), out_specs=spec))
+
+got = dist(elems)
+want = suffix_scan(lqt_combine, elems)
+gap = max(float(jnp.abs(a - b).max()) for a, b in zip(got, want))
+print(f"devices           : {jax.device_count()}")
+print(f"time blocks       : {T} ({T // 8} per device)")
+print(f"distributed vs single-device scan max gap: {gap:.2e}")
+print("filter info at t_f (diag):", jnp.diagonal(got.J[0]).round(3))
+assert gap < 1e-8
+print("OK")

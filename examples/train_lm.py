@@ -1,0 +1,48 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Uses the exact smollm-135m architecture (135M params) on the synthetic
+noisy-copy corpus, with checkpointing/auto-resume enabled -- kill and
+rerun the script and it continues from the last checkpoint.
+
+CPU-sized defaults (seq 256, batch 4) keep a step under a few seconds;
+on a TPU mesh the same driver scales via the sharding rules (see
+launch/train.py for the CLI version).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+
+import jax
+
+from repro.config import TrainConfig, get_config
+from repro.train.data import LMDataPipeline
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = get_config("smollm-135m")          # the real 135M config
+    tcfg = TrainConfig(
+        learning_rate=6e-4, warmup_steps=20, total_steps=args.steps,
+        seq_len=args.seq, global_batch=args.batch,
+        checkpoint_every=50, keep_checkpoints=2, log_every=10)
+    pipe = LMDataPipeline(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, seed=0, period=64, corruption=0.1)
+    print(f"[example] {cfg.name}: {cfg.param_count():,} params, "
+          f"{jax.device_count()} device(s)")
+    trainer = Trainer(cfg=cfg, tcfg=tcfg, pipeline=pipe,
+                      ckpt_dir=args.ckpt_dir)
+    _, _, metrics = trainer.run(args.steps)
+    print(f"[example] final loss {float(metrics['loss']):.4f} "
+          f"(uniform floor ~{jax.numpy.log(cfg.vocab_size):.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro: parallel-in-time continuous MAP estimation + LM framework.
+
+See DESIGN.md for the system inventory.
+"""
+__version__ = "0.1.0"

@@ -1,0 +1,39 @@
+"""Paper section 5.1: the partially observed Wiener velocity model
+(eqs. 52-54) -- the linear experiment behind Fig. 1."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import LinearSDE
+
+
+@dataclasses.dataclass(frozen=True)
+class WienerVelocityConfig:
+    t0: float = 0.0
+    tf: float = 5.0
+    q: float = 4.0           # W = q I2 (paper: 4)
+    r: float = 1e-2          # R = r I2
+    p0: float = 1e-2         # P0 = p0 I4 (paper; stiff for explicit Euler
+                             # unless dt < ~2.5e-3, see DESIGN.md S6)
+    nsub: int = 10           # paper: n = 10 substeps per block
+    q_jitter: float = 0.0    # solvers never invert Q; keep it singular
+
+    def model(self) -> LinearSDE:
+        F = jnp.block([[jnp.zeros((2, 2)), jnp.eye(2)],
+                       [jnp.zeros((2, 4))]])
+        H = jnp.concatenate([jnp.eye(2), jnp.zeros((2, 2))], axis=1)
+        L = jnp.concatenate([jnp.zeros((2, 2)), jnp.eye(2)], axis=0)
+        Q = L @ (self.q * jnp.eye(2)) @ L.T
+        if self.q_jitter:
+            Q = Q + self.q_jitter * jnp.eye(4)
+        return LinearSDE(
+            F=F, c=jnp.zeros(4), H=H, r=jnp.zeros(2), Q=Q,
+            R=self.r * jnp.eye(2),
+            m0=jnp.array([5.0, 5.0, 0.0, 0.0]),
+            P0=self.p0 * jnp.eye(4))
+
+
+def config() -> WienerVelocityConfig:
+    return WienerVelocityConfig()

@@ -1,0 +1,59 @@
+"""Continuous-time MAP trajectory estimation, parallel-in-time.
+
+Implements Razavi, Garcia-Fernandez & Sarkka (2025), "Temporal
+parallelisation of continuous-time maximum-a-posteriori trajectory
+estimation": parallel Kalman-Bucy filtering, parallel continuous-time RTS
+and two-filter smoothing, and iterated linearisation for nonlinear models,
+all built on associative scans.
+"""
+from .api import map_estimate, METHODS
+from .combine import (
+    affine_combine,
+    apply_element_to_value,
+    elem_min_initial,
+    lqt_combine,
+    value_as_element,
+)
+from .nonlinear import iterated_map
+from .oracle import qp_map_estimate, qp_map_from_grid
+from .parallel import parallel_backward, parallel_rts, parallel_two_filter
+from .pscan import distributed_scan, prefix_scan, suffix_scan
+from .sde import (
+    LinearSDE,
+    NonlinearSDE,
+    build_grid_lqt,
+    grid_lqt_from_linear,
+    grid_lqt_from_nonlinear,
+    om_cost_linear,
+    om_cost_nonlinear,
+    simulate_linear,
+    simulate_nonlinear,
+    time_grid,
+)
+from .sequential import (
+    sequential_backward,
+    sequential_rts,
+    sequential_two_filter,
+)
+from .types import (
+    AffineElement,
+    GridLQT,
+    LQTElement,
+    MAPSolution,
+    ValueFn,
+)
+
+__all__ = [
+    "AffineElement", "GridLQT", "LQTElement", "MAPSolution", "ValueFn",
+    "LinearSDE", "NonlinearSDE", "METHODS",
+    "map_estimate", "iterated_map",
+    "parallel_backward", "parallel_rts", "parallel_two_filter",
+    "sequential_backward", "sequential_rts", "sequential_two_filter",
+    "prefix_scan", "suffix_scan", "distributed_scan",
+    "lqt_combine", "affine_combine", "apply_element_to_value",
+    "value_as_element", "elem_min_initial",
+    "build_grid_lqt", "grid_lqt_from_linear", "grid_lqt_from_nonlinear",
+    "simulate_linear", "simulate_nonlinear", "time_grid",
+    "om_cost_linear", "om_cost_nonlinear",
+    "qp_map_estimate", "qp_map_from_grid",
+]

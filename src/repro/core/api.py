@@ -1,0 +1,56 @@
+"""Top-level user API for continuous-time MAP trajectory estimation.
+
+    from repro.core import map_estimate
+    sol = map_estimate(model, ts, y, method="parallel_rts")
+
+``model`` is a :class:`~repro.core.sde.LinearSDE` or
+:class:`~repro.core.sde.NonlinearSDE`; nonlinear models are solved with the
+iterated linearisation of section 4.4.  All solvers are jit-friendly pure
+functions; batches of measurement records can be handled with ``jax.vmap``
+(see examples/).
+"""
+from __future__ import annotations
+
+from typing import Union
+
+import jax.numpy as jnp
+
+from .nonlinear import iterated_map
+from .parallel import parallel_rts, parallel_two_filter
+from .sde import LinearSDE, NonlinearSDE, grid_lqt_from_linear
+from .sequential import sequential_rts, sequential_two_filter
+from .types import MAPSolution
+
+METHODS = (
+    "parallel_rts", "parallel_two_filter",
+    "sequential_rts", "sequential_two_filter",
+)
+
+
+def map_estimate(
+    model: Union[LinearSDE, NonlinearSDE],
+    ts: jnp.ndarray,
+    y: jnp.ndarray,
+    *,
+    method: str = "parallel_rts",
+    nsub: int = 10,
+    mode: str = "euler",
+    iterations: int = 5,
+    divergence_correction: bool = False,
+) -> MAPSolution:
+    if method not in METHODS:
+        raise ValueError(f"method must be one of {METHODS}, got {method!r}")
+
+    if isinstance(model, NonlinearSDE):
+        return iterated_map(
+            model, ts, y, iterations=iterations, method=method, nsub=nsub,
+            mode=mode, divergence_correction=divergence_correction)
+
+    grid = grid_lqt_from_linear(model, ts, y)
+    if method == "parallel_rts":
+        return parallel_rts(grid, nsub, mode)
+    if method == "parallel_two_filter":
+        return parallel_two_filter(grid, nsub, mode)
+    if method == "sequential_rts":
+        return sequential_rts(grid, mode)
+    return sequential_two_filter(grid, mode)

@@ -1,0 +1,96 @@
+"""Dense quadratic-program oracle for the discretised MAP problem.
+
+The Euler-discretised (backward-Euler in original time, matching the
+reversed-time solvers -- see ``sde.py`` docstring) Onsager-Machlup /
+minimum-energy functional is an unconstrained convex quadratic in the
+stacked trajectory ``X = (x_0, ..., x_N)``:
+
+    M(X) = 1/2 (x_0 - m_0)^T P_0^{-1} (x_0 - m_0)
+         + sum_k dt/2 || (x_{k+1}-x_k)/dt - F_k x_{k+1} - c_k ||^2_{Q_k^{-1}}
+         + sum_k dt/2 || y_k - H_k x_{k+1} - r_k ||^2_{R_k^{-1}}
+         (+ sum_k dt lin_k . x_{k+1})
+
+Building the dense Hessian and solving gives the EXACT discrete MAP
+trajectory -- the ground truth the scan-based solvers are tested against
+(``discrete`` mode must match to round-off; ``euler`` mode to O(dt)).
+Only intended for small N (tests); cost O((N nx)^3).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .sde import LinearSDE
+from .types import GridLQT
+
+
+def qp_map_estimate(model: LinearSDE, ts: jnp.ndarray, y: jnp.ndarray,
+                    lin: jnp.ndarray | None = None) -> jnp.ndarray:
+    F, c, H, r, Q, R = model.grids(ts)
+    dt = jnp.diff(ts)
+    return _qp_solve(F, c, H, r, Q, R, y, dt, model.m0, model.P0, lin)
+
+
+def qp_map_from_grid(grid: GridLQT) -> jnp.ndarray:
+    """Solve the QP directly from a (reversed-time) GridLQT; returns the
+    trajectory in ORIGINAL time order (N+1, nx)."""
+    flip = lambda a: jnp.flip(a, axis=0)
+    F = -flip(grid.F)
+    c = -flip(grid.c)
+    H = flip(grid.H)
+    r = flip(grid.r)
+    Q = flip(grid.Q)
+    Rinv = flip(grid.Rinv)
+    y = flip(grid.y)
+    dt = flip(grid.dt)
+    lin = None if grid.lin is None else flip(grid.lin)
+    P0 = jnp.linalg.inv(grid.S_T)
+    m0 = P0 @ grid.v_T
+    return _qp_solve(F, c, H, r, Q, jnp.linalg.inv(Rinv), y, dt, m0, P0, lin)
+
+
+def _qp_solve(F, c, H, r, Q, R, y, dt, m0, P0, lin=None):
+    # Test oracle: plain numpy (no tracing) -- the unrolled .at[] graph a
+    # jnp version produces is pathologically slow to compile for large N.
+    import numpy as np
+
+    F, c, H, r, Q, R, y, dt, m0, P0 = (
+        np.asarray(a, dtype=np.float64)
+        for a in (F, c, H, r, Q, R, y, dt, m0, P0))
+    if lin is not None:
+        lin = np.asarray(lin, dtype=np.float64)
+    N, nx = F.shape[0], F.shape[-1]
+    n_tot = (N + 1) * nx
+    Hmat = np.zeros((n_tot, n_tot))
+    g = np.zeros((n_tot,))
+    I = np.eye(nx)
+
+    P0inv = np.linalg.inv(P0)
+    Hmat[:nx, :nx] += P0inv
+    g[:nx] += P0inv @ m0
+
+    Qinv = np.linalg.inv(Q)
+    Rinv = np.linalg.inv(R)
+    for k in range(N):
+        dtk = dt[k]
+        # dynamics residual  D_k x_k + E_k x_{k+1} - c_k  with
+        # D_k = -I/dt, E_k = I/dt - F_k (backward-Euler), weight dt * Qinv
+        D = -I / dtk
+        E = I / dtk - F[k]
+        W = dtk * Qinv[k]
+        sl0 = slice(k * nx, (k + 1) * nx)
+        sl1 = slice((k + 1) * nx, (k + 2) * nx)
+        Hmat[sl0, sl0] += D.T @ W @ D
+        Hmat[sl0, sl1] += D.T @ W @ E
+        Hmat[sl1, sl0] += E.T @ W @ D
+        Hmat[sl1, sl1] += E.T @ W @ E
+        g[sl0] += D.T @ W @ c[k]
+        g[sl1] += E.T @ W @ c[k]
+        # measurement  y_k ~ H_k x_{k+1} + r_k, weight dt * Rinv
+        Wm = dtk * Rinv[k]
+        Hmat[sl1, sl1] += H[k].T @ Wm @ H[k]
+        g[sl1] += H[k].T @ Wm @ (y[k] - r[k])
+        if lin is not None:
+            g[sl1] += -dtk * lin[k]
+
+    X = np.linalg.solve(Hmat, g)
+    return jnp.asarray(X.reshape(N + 1, nx))

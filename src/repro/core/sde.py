@@ -1,0 +1,294 @@
+"""Continuous-time state-space models, grid discretisation and simulation.
+
+Implements the model classes of eq. (1)/(12), the time reversal of section
+2.2 producing the :class:`~repro.core.types.GridLQT` problem, Euler-Maruyama
+simulation for generating synthetic data, and the (discretised)
+Onsager-Machlup cost functional of eq. (2).
+
+Grid conventions (see DESIGN.md S1 and tests/test_oracle.py):
+
+* original time grid ``t_k = t0 + k dt`` for ``k = 0..N``; coefficient /
+  measurement index ``k`` covers ``[t_k, t_{k+1}]``;
+* the reversed problem has ``phi_j = x(t_{N-j})``; reversed interval ``j``
+  maps to original interval ``k = N-1-j`` and its Euler step evaluates the
+  drift at the reversed-left point ``phi_j = x_{k+1}`` (backward-Euler in
+  original time);
+* continuous-time measurement noise with spectral density R discretises to
+  ``y_k ~ N(h(x), R/dt)`` so that ``dt * y_k^T R^{-1} y_k`` is the correct
+  quadrature of the Onsager-Machlup measurement integral.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .types import GridLQT
+
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearSDE:
+    """Linear-affine model (eq. 12), possibly time-varying via callables.
+
+    ``F, c, H, r, Q, R`` may each be a constant array or a callable of t.
+    ``Q = L W L^T`` must be invertible (paper assumption, section 2.1).
+    """
+
+    F: Array | Callable[[Array], Array]
+    c: Array | Callable[[Array], Array]
+    H: Array | Callable[[Array], Array]
+    r: Array | Callable[[Array], Array]
+    Q: Array | Callable[[Array], Array]
+    R: Array | Callable[[Array], Array]
+    m0: Array
+    P0: Array
+
+    @property
+    def nx(self) -> int:
+        return self.m0.shape[-1]
+
+    def _eval(self, item, ts):
+        if callable(item):
+            return jax.vmap(item)(ts)
+        arr = jnp.asarray(item)
+        return jnp.broadcast_to(arr, ts.shape + arr.shape)
+
+    def grids(self, ts: Array):
+        """Evaluate all coefficients on the left points of the N intervals."""
+        tl = ts[:-1]
+        return (
+            self._eval(self.F, tl),
+            self._eval(self.c, tl),
+            self._eval(self.H, tl),
+            self._eval(self.r, tl),
+            self._eval(self.Q, tl),
+            self._eval(self.R, tl),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class NonlinearSDE:
+    """Nonlinear model (eq. 1): drift f(x, t), observation h(x, t)."""
+
+    f: Callable[[Array, Array], Array]
+    h: Callable[[Array, Array], Array]
+    Q: Array | Callable[[Array], Array]
+    R: Array | Callable[[Array], Array]
+    m0: Array
+    P0: Array
+
+    @property
+    def nx(self) -> int:
+        return self.m0.shape[-1]
+
+    def _eval(self, item, ts):
+        if callable(item):
+            return jax.vmap(item)(ts)
+        arr = jnp.asarray(item)
+        return jnp.broadcast_to(arr, ts.shape + arr.shape)
+
+    def linearise(self, xbar: Array, ts: Array):
+        """First-order Taylor expansion about a nominal trajectory.
+
+        Returns grid arrays (F, c, H, r) with ``f(x,t) ~= F x + c`` and
+        ``h(x,t) ~= H x + r`` at each interval left point (section 4.4).
+        """
+        tl = ts[:-1]
+        xb = xbar[:-1]
+
+        def lin_f(x, t):
+            F = jax.jacfwd(self.f, argnums=0)(x, t)
+            c = self.f(x, t) - F @ x
+            return F, c
+
+        def lin_h(x, t):
+            H = jax.jacfwd(self.h, argnums=0)(x, t)
+            r = self.h(x, t) - H @ x
+            return H, r
+
+        F, c = jax.vmap(lin_f)(xb, tl)
+        H, r = jax.vmap(lin_h)(xb, tl)
+        return F, c, H, r
+
+    def divergence_gradient(self, xbar: Array, ts: Array) -> Array:
+        """grad_x (div f)(xbar, t): the linearised Onsager-Machlup
+        divergence correction (optional, DESIGN.md S1)."""
+        tl = ts[:-1]
+        xb = xbar[:-1]
+
+        def div_f(x, t):
+            return jnp.trace(jax.jacfwd(self.f, argnums=0)(x, t))
+
+        return jax.vmap(jax.grad(div_f, argnums=0))(xb, tl)
+
+
+def time_grid(t0: float, tf: float, num_steps: int, dtype=jnp.float64) -> Array:
+    return jnp.linspace(t0, tf, num_steps + 1, dtype=dtype)
+
+
+def build_grid_lqt(
+    F: Array, c: Array, H: Array, r: Array, Q: Array, R: Array,
+    y: Array, dt: Array, m0: Array, P0: Array,
+    lin: Optional[Array] = None,
+) -> GridLQT:
+    """Time-reverse grid coefficients into the LQT problem of section 2.4.
+
+    Reversed interval ``j`` <- original interval ``N-1-j``;
+    ``F~ = -F``, ``c~ = -c`` (section 2.2 definitions).
+    """
+    flip = lambda a: jnp.flip(a, axis=0)
+    Rinv = jnp.linalg.inv(R)
+    S_T = jnp.linalg.inv(P0)
+    v_T = S_T @ m0
+    return GridLQT(
+        dt=flip(jnp.broadcast_to(dt, y.shape[:1])),
+        F=-flip(F), c=-flip(c),
+        H=flip(H), r=flip(r),
+        Q=flip(Q), Rinv=flip(Rinv), y=flip(y),
+        S_T=S_T, v_T=v_T,
+        lin=None if lin is None else flip(lin),
+    )
+
+
+def grid_lqt_from_linear(model: LinearSDE, ts: Array, y: Array) -> GridLQT:
+    F, c, H, r, Q, R = model.grids(ts)
+    dt = jnp.diff(ts)
+    return build_grid_lqt(F, c, H, r, Q, R, y, dt, model.m0, model.P0)
+
+
+def grid_lqt_from_nonlinear(
+    model: NonlinearSDE, ts: Array, y: Array, xbar: Array,
+    divergence_correction: bool = False,
+) -> GridLQT:
+    F, c, H, r = model.linearise(xbar, ts)
+    tl = ts[:-1]
+    Q = model._eval(model.Q, tl)
+    R = model._eval(model.R, tl)
+    dt = jnp.diff(ts)
+    lin = None
+    if divergence_correction:
+        # Onsager-Machlup adds +1/2 int div f dt; linearised about xbar the
+        # phi-dependent part is  1/2 g(xbar)^T phi with g = grad div f.
+        lin = 0.5 * model.divergence_gradient(xbar, ts)
+    return build_grid_lqt(F, c, H, r, Q, R, y, dt, model.m0, model.P0, lin=lin)
+
+
+# ---------------------------------------------------------------------------
+# Simulation + cost functional
+# ---------------------------------------------------------------------------
+
+
+def _psd_sqrt(Q):
+    """Matrix square root of a (possibly singular) PSD matrix via eigh --
+    Q = L W L^T is singular for most physical models (paper section 2.1
+    allows this; only simulation needs a noise square root)."""
+    w, V = jnp.linalg.eigh(Q)
+    return V @ jnp.diag(jnp.sqrt(jnp.clip(w, 0.0))) @ V.T
+
+
+def simulate_linear(model: LinearSDE, ts: Array, key: jax.Array):
+    """Euler-Maruyama simulation of (12) + discretised measurements."""
+    F, c, H, r, Q, R = model.grids(ts)
+    dt = jnp.diff(ts)
+    kx, ky, k0 = jax.random.split(key, 3)
+    x0 = model.m0 + jnp.linalg.cholesky(model.P0) @ jax.random.normal(
+        k0, model.m0.shape, dtype=model.m0.dtype)
+
+    def step(x, inp):
+        Fk, ck, Qk, dtk, eps = inp
+        xn = x + dtk * (Fk @ x + ck) + jnp.sqrt(dtk) * (
+            _psd_sqrt(Qk) @ eps)
+        return xn, xn
+
+    eps = jax.random.normal(kx, (dt.shape[0],) + model.m0.shape,
+                            dtype=model.m0.dtype)
+    _, xs = jax.lax.scan(step, x0, (F, c, Q, dt, eps))
+    xs = jnp.concatenate([x0[None], xs], axis=0)
+
+    ny = H.shape[-2]
+    noise = jax.random.normal(ky, (dt.shape[0], ny), dtype=model.m0.dtype)
+    Rch = jnp.linalg.cholesky(R)
+    # measurement for interval k uses the reversed-left point x_{k+1}
+    # (backward-Euler convention, see module docstring)
+    y = (jnp.einsum("kij,kj->ki", H, xs[1:]) + r
+         + jnp.einsum("kij,kj->ki", Rch, noise) / jnp.sqrt(dt)[:, None])
+    return xs, y
+
+
+def simulate_nonlinear(model: NonlinearSDE, ts: Array, key: jax.Array):
+    dt = jnp.diff(ts)
+    tl = ts[:-1]
+    Q = model._eval(model.Q, tl)
+    R = model._eval(model.R, tl)
+    kx, ky, k0 = jax.random.split(key, 3)
+    x0 = model.m0 + jnp.linalg.cholesky(model.P0) @ jax.random.normal(
+        k0, model.m0.shape, dtype=model.m0.dtype)
+
+    def step(x, inp):
+        t, Qk, dtk, eps = inp
+        xn = x + dtk * model.f(x, t) + jnp.sqrt(dtk) * (
+            _psd_sqrt(Qk) @ eps)
+        return xn, xn
+
+    eps = jax.random.normal(kx, (dt.shape[0],) + model.m0.shape,
+                            dtype=model.m0.dtype)
+    _, xs = jax.lax.scan(step, x0, (tl, Q, dt, eps))
+    xs = jnp.concatenate([x0[None], xs], axis=0)
+
+    hx = jax.vmap(model.h)(xs[1:], tl)
+    Rch = jnp.linalg.cholesky(R)
+    noise = jax.random.normal(ky, hx.shape, dtype=model.m0.dtype)
+    y = hx + jnp.einsum("kij,kj->ki", Rch, noise) / jnp.sqrt(dt)[:, None]
+    return xs, y
+
+
+def om_cost_linear(model: LinearSDE, ts: Array, y: Array, x: Array) -> Array:
+    """Discretised Onsager-Machlup / minimum-energy cost of a trajectory.
+
+    Uses the backward-Euler quadrature matching the reversed-time solvers
+    (drift and measurement evaluated at ``x_{k+1}``); the divergence term is
+    constant for linear models and omitted (it cannot change the argmin).
+    """
+    F, c, H, r, Q, R = model.grids(ts)
+    dt = jnp.diff(ts)
+    d0 = x[0] - model.m0
+    cost = 0.5 * d0 @ jnp.linalg.solve(model.P0, d0)
+    xr = x[1:]
+    resid = (x[1:] - x[:-1]) / dt[:, None] - (
+        jnp.einsum("kij,kj->ki", F, xr) + c)
+    cost = cost + 0.5 * jnp.sum(
+        dt * jnp.einsum("ki,kij,kj->k", resid, jnp.linalg.inv(Q), resid))
+    innov = y - (jnp.einsum("kij,kj->ki", H, xr) + r)
+    cost = cost + 0.5 * jnp.sum(
+        dt * jnp.einsum("ki,kij,kj->k", innov, jnp.linalg.inv(R), innov))
+    return cost
+
+
+def om_cost_nonlinear(
+    model: NonlinearSDE, ts: Array, y: Array, x: Array,
+    divergence_correction: bool = False,
+) -> Array:
+    dt = jnp.diff(ts)
+    tl = ts[:-1]
+    Q = model._eval(model.Q, tl)
+    R = model._eval(model.R, tl)
+    d0 = x[0] - model.m0
+    cost = 0.5 * d0 @ jnp.linalg.solve(model.P0, d0)
+    xr = x[1:]
+    fx = jax.vmap(model.f)(xr, tl)
+    resid = (x[1:] - x[:-1]) / dt[:, None] - fx
+    cost = cost + 0.5 * jnp.sum(
+        dt * jnp.einsum("ki,kij,kj->k", resid, jnp.linalg.inv(Q), resid))
+    innov = y - jax.vmap(model.h)(xr, tl)
+    cost = cost + 0.5 * jnp.sum(
+        dt * jnp.einsum("ki,kij,kj->k", innov, jnp.linalg.inv(R), innov))
+    if divergence_correction:
+        def div_f(xk, t):
+            return jnp.trace(jax.jacfwd(model.f, argnums=0)(xk, t))
+        cost = cost + 0.5 * jnp.sum(dt * jax.vmap(div_f)(xr, tl))
+    return cost

@@ -1,0 +1,111 @@
+"""Core pytree types for continuous-time MAP estimation.
+
+Notation follows the paper (Razavi, Garcia-Fernandez, Sarkka 2025):
+
+* ``LQTElement``    -- conditional value function parameters (A, b, C, eta, J)
+                       of eq. (41): V(phi, s; z, gamma) = const
+                       + 1/2 phi^T J phi - phi^T eta
+                       + 1/2 (z - A phi - b)^T C^{-1} (z - A phi - b).
+* ``AffineElement`` -- transition pair (Phi, beta) of eq. (20)/(45)-(46):
+                       phi(gamma) = Phi(gamma, s) phi(s) + beta(gamma, s).
+* ``ValueFn``       -- quadratic value function V(phi) = 1/2 phi^T S phi
+                       - v^T phi (eq. 14), i.e. information-form filter state.
+* ``GridLQT``       -- the time-REVERSED, grid-discretised linear-affine
+                       optimal control problem (eqs. 3-6 and 13) that the MAP
+                       problem reduces to.  All leading axes are the substep
+                       time axis of length ``N = T * n``.
+
+Every type is a NamedTuple and therefore a JAX pytree; all algorithms are
+pure functions over them so ``vmap``/``pjit``/``shard_map`` compose freely.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+
+class LQTElement(NamedTuple):
+    """Conditional value function parameters, possibly with leading batch axes."""
+
+    A: jnp.ndarray    # (..., nx, nx)
+    b: jnp.ndarray    # (..., nx)
+    C: jnp.ndarray    # (..., nx, nx), symmetric PSD
+    eta: jnp.ndarray  # (..., nx)
+    J: jnp.ndarray    # (..., nx, nx), symmetric PSD
+
+    @property
+    def nx(self) -> int:
+        return self.A.shape[-1]
+
+    def __len__(self) -> int:  # leading (scan) axis length
+        return self.A.shape[0]
+
+
+class AffineElement(NamedTuple):
+    """Affine trajectory-recovery element (eqs. 45-46)."""
+
+    Phi: jnp.ndarray   # (..., nx, nx)
+    beta: jnp.ndarray  # (..., nx)
+
+    def __len__(self) -> int:
+        return self.Phi.shape[0]
+
+
+class ValueFn(NamedTuple):
+    """Quadratic value function 1/2 phi^T S phi - v^T phi (information form)."""
+
+    S: jnp.ndarray  # (..., nx, nx)
+    v: jnp.ndarray  # (..., nx)
+
+
+class GridLQT(NamedTuple):
+    """Time-reversed discretised LQT problem for the MAP estimate.
+
+    Substep ``j`` covers reversed time ``[tau_j, tau_{j+1}]`` with step
+    ``dt[j]``; coefficients are evaluated at the interval (reversed-left)
+    point.  The terminal (reversed) boundary carries the prior:
+    ``S_T = P0^{-1}``, ``v_T = P0^{-1} m0`` (below eq. 15).
+    """
+
+    dt: jnp.ndarray      # (N,) substep lengths
+    F: jnp.ndarray       # (N, nx, nx)   F~(tau_j)  = -F(t_f - tau_j)
+    c: jnp.ndarray       # (N, nx)       c~(tau_j)  = -c(t_f - tau_j)
+    H: jnp.ndarray       # (N, ny, nx)   H~(tau_j)
+    r: jnp.ndarray       # (N, ny)
+    Q: jnp.ndarray       # (N, nx, nx)   Q~ = L W L^T (invertible)
+    Rinv: jnp.ndarray    # (N, ny, ny)   R~^{-1}
+    y: jnp.ndarray       # (N, ny)       y~(tau_j)
+    S_T: jnp.ndarray     # (nx, nx)      terminal information matrix
+    v_T: jnp.ndarray     # (nx,)         terminal information vector
+    lin: Optional[jnp.ndarray] = None  # (N, nx) optional extra linear cost
+    # ``lin`` adds  lin_j . phi  * dt_j  to the running cost (used for the
+    # optional Onsager-Machlup divergence correction, DESIGN.md S1).
+
+    @property
+    def N(self) -> int:
+        return self.F.shape[0]
+
+    @property
+    def nx(self) -> int:
+        return self.F.shape[-1]
+
+    @property
+    def ny(self) -> int:
+        return self.H.shape[-2]
+
+
+class MAPSolution(NamedTuple):
+    """Result of a MAP solve, reported in ORIGINAL time order.
+
+    ``x`` has N+1 points (t_0 .. t_f inclusive).  ``S``/``v`` are the
+    information-form Kalman-Bucy filter quantities S(tau), v(tau) mapped back
+    to original time (S[k] = S(tau_{N-k})), i.e. the filter information at
+    time t_k.  ``cov`` is the (optional) smoothing covariance (two-filter
+    method only, a beyond-paper extra).
+    """
+
+    x: jnp.ndarray            # (N+1, nx) MAP trajectory, original time
+    S: jnp.ndarray            # (N+1, nx, nx)
+    v: jnp.ndarray            # (N+1, nx)
+    cov: Optional[jnp.ndarray] = None  # (N+1, nx, nx) smoothing covariance

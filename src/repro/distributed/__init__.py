@@ -1,0 +1,5 @@
+from . import sharding
+from .sharding import (
+    choose_pspec, logical_constraint, mesh_context, named_sharding,
+    tree_pspecs, tree_shardings,
+)

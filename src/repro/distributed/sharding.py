@@ -1,0 +1,190 @@
+"""Logical-axis sharding rules (DP/TP/EP/SP) with divisibility fallback.
+
+Parameters and activations are annotated with LOGICAL axis names
+("embed", "heads", "ff", "vocab", "experts", ...).  ``choose_pspec`` maps a
+logical shape to a concrete ``PartitionSpec`` for the active mesh:
+
+* exactly one tensor dimension is model-sharded, picked by walking
+  ``MODEL_PRIORITY`` and taking the first logical axis that is present AND
+  whose size is divisible by the mesh's model-axis size (llava's 56 q-heads
+  do not divide 16 -> falls through to the 128 head_dim; granite's 40
+  experts fall through to d_ff);
+* the "batch" axis shards over ("pod", "data") (the pod axis is folded into
+  data parallelism);
+* optimizer-state tensors may additionally shard their largest replicated
+  dimension over "data" (ZeRO-1), handled in ``train/optimizer.py``.
+
+``logical_constraint`` applies ``with_sharding_constraint`` when called
+under an active mesh context and is a no-op otherwise, so model code is
+mesh-agnostic and single-device tests run unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# priority of logical axes for the single model-sharded dimension
+MODEL_PRIORITY: Sequence[str] = (
+    "experts", "vocab", "ff", "heads", "kv_heads", "ssm_inner", "ssm_x",
+    "ssm_heads", "head", "embed_model",
+)
+
+# logical axes that shard over the data (+pod) axes
+BATCH_AXES = ("batch",)
+
+# logical axes that may shard over data for sequence parallelism (opt-in)
+SEQ_AXES = ("seq_sp",)
+
+
+class _MeshContext(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.data_axes: tuple = ("data",)
+        self.model_axis: str = "model"
+        self.tp_exclude: frozenset = frozenset()
+
+
+_CTX = _MeshContext()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, *, batch_axes: tuple = None,
+                 tp_exclude=()):
+    """Activate logical->physical rules for ``mesh``.
+
+    Meshes with a "pod" axis fold it into the batch sharding.
+
+    ``batch_axes`` overrides the mesh axes used for batch/zero1 sharding
+    (e.g. ("pod", "data", "model") for the dp-only policy on small
+    models); ``tp_exclude`` removes logical names from the model-sharding
+    priority (e.g. everything but "vocab" under dp-only).
+    """
+    prev = (_CTX.mesh, _CTX.data_axes, _CTX.model_axis, _CTX.tp_exclude)
+    _CTX.mesh = mesh
+    axis_names = mesh.axis_names
+    if batch_axes is not None:
+        _CTX.data_axes = tuple(a for a in batch_axes if a in axis_names)
+    else:
+        _CTX.data_axes = tuple(a for a in ("pod", "data")
+                               if a in axis_names)
+    _CTX.model_axis = "model" if "model" in axis_names else None
+    _CTX.tp_exclude = frozenset(tp_exclude)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        (_CTX.mesh, _CTX.data_axes, _CTX.model_axis,
+         _CTX.tp_exclude) = prev
+
+
+def data_parallel_size(mesh: Optional[Mesh] = None) -> int:
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return 1
+    return _axis_size(mesh, tuple(_CTX.data_axes)) if _CTX.data_axes else 1
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _axis_size(mesh: Mesh, names) -> int:
+    size = 1
+    for n in names if isinstance(names, tuple) else (names,):
+        size *= mesh.shape[n]
+    return size
+
+
+def choose_pspec(shape: Sequence[int], logical: Sequence[Optional[str]],
+                 mesh: Optional[Mesh] = None) -> P:
+    """Map logical axes to a PartitionSpec under the active mesh."""
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return P()
+    assert len(shape) == len(logical), (shape, logical)
+    entries: list = [None] * len(shape)
+
+    # batch / ZeRO-1 axes -> the data axes, with progressive fallback to
+    # fewer axes when the dimension does not divide the full product
+    # (e.g. batch 256 on a 512-chip dp-only layout).
+    for i, name in enumerate(logical):
+        if name in BATCH_AXES + ("zero1",) and _CTX.data_axes:
+            axes = tuple(_CTX.data_axes)
+            while axes:
+                if shape[i] % _axis_size(mesh, axes) == 0:
+                    entries[i] = axes if len(axes) > 1 else axes[0]
+                    break
+                axes = axes[1:]
+
+    def used_axes() -> set:
+        out = set()
+        for e in entries:
+            if e is None:
+                continue
+            out.update(e if isinstance(e, tuple) else (e,))
+        return out
+
+    # sequence-parallel axis -> the model axis (megatron-style SP)
+    if _CTX.model_axis is not None and _CTX.model_axis not in used_axes():
+        msize = mesh.shape[_CTX.model_axis]
+        for i, name in enumerate(logical):
+            if name in SEQ_AXES and entries[i] is None \
+                    and shape[i] % msize == 0:
+                entries[i] = _CTX.model_axis
+                break
+
+    # one model-sharded dim by priority with divisibility fallback
+    if _CTX.model_axis is not None and _CTX.model_axis not in used_axes():
+        msize = mesh.shape[_CTX.model_axis]
+        for cand in MODEL_PRIORITY:
+            if cand in _CTX.tp_exclude:
+                continue
+            placed = False
+            for i, name in enumerate(logical):
+                if name == cand and entries[i] is None \
+                        and shape[i] % msize == 0 and shape[i] >= msize:
+                    entries[i] = _CTX.model_axis
+                    placed = True
+                    break
+            if placed:
+                break
+    return P(*entries)
+
+
+def logical_constraint(x, *logical: Optional[str]):
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = choose_pspec(x.shape, logical, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(shape, logical, mesh: Optional[Mesh] = None):
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, choose_pspec(shape, logical, mesh))
+
+
+def tree_pspecs(axes_tree, shapes_tree, mesh: Optional[Mesh] = None):
+    """Map a tree of logical-axes tuples + shapes to PartitionSpecs."""
+    mesh = mesh or _CTX.mesh
+    return jax.tree_util.tree_map(
+        lambda ax, shp: choose_pspec(shp, ax, mesh),
+        axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def tree_shardings(axes_tree, shapes_tree, mesh: Optional[Mesh] = None):
+    mesh = mesh or _CTX.mesh
+    specs = tree_pspecs(axes_tree, shapes_tree, mesh)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the performance hot spots.
+
+Each kernel ships three layers: ``kernel.py`` (pl.pallas_call + BlockSpec
+VMEM tiling), ``ops.py`` (jitted wrapper + training-path VJP), ``ref.py``
+(pure-jnp oracle used by the allclose test sweeps).  On the CPU container
+the kernels run under ``interpret=True``; TPU is the deployment target.
+"""
+from . import flash_attention, lqt_combine, ssd
+
+__all__ = ["flash_attention", "lqt_combine", "ssd"]

@@ -1,0 +1,2 @@
+from .ops import attention, attention_trainable
+from .ref import mha_ref

@@ -1,0 +1,42 @@
+"""Jitted wrapper for the flash-attention kernel (+ ref-VJP training path)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+from .ref import mha_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              block_q: int = 128, block_k: int = 128,
+              interpret: bool = False):
+    return flash_attention(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def attention_trainable(q, k, v, causal=True, window=None, interpret=False):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           interpret=interpret)
+
+
+def _fwd(q, k, v, causal, window, interpret):
+    return attention_trainable(q, k, v, causal, window, interpret), (q, k, v)
+
+
+def _bwd(causal, window, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: mha_ref(q, k, v, causal=causal, window=window),
+        q, k, v)
+    return vjp(g)
+
+
+attention_trainable.defvjp(_fwd, _bwd)

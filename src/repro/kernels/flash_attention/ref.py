@@ -1,0 +1,40 @@
+"""Pure-jnp oracle: causal (optionally sliding-window) GQA attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+            scale: float | None = None):
+    """Reference attention.
+
+    Args:
+      q: (B, Hq, Lq, D)
+      k, v: (B, Hkv, Lk, D) with Hq % Hkv == 0 (GQA)
+      causal: apply the causal mask (assumes Lq == Lk when True)
+      window: sliding-window size (positions attend to the previous
+        ``window-1`` positions and themselves)
+      scale: logit scale; defaults to D**-0.5
+    Returns:
+      (B, Hq, Lq, D)
+    """
+    B, Hq, Lq, D = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    kk = jnp.repeat(k, rep, axis=1)
+    vv = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) * scale
+    if causal or window is not None:
+        iq = jnp.arange(Lq)[:, None] + (Lk - Lq)
+        jk = jnp.arange(Lk)[None, :]
+        mask = jnp.ones((Lq, Lk), dtype=bool)
+        if causal:
+            mask &= iq >= jk
+        if window is not None:
+            mask &= (iq - jk) < window
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(q.dtype), vv)

@@ -1,0 +1,2 @@
+from .ops import lqt_combine_batched, scan_combine_fn
+from .ref import lqt_combine_ref

@@ -1,0 +1,93 @@
+"""Jitted wrappers for the LQT-combine Pallas kernel.
+
+``lqt_combine_batched`` takes the natural (B, nx, nx)/(B, nx) layout,
+re-lays out to the kernel's lane-major form (batch minor), pads B to the
+block size, runs the kernel and restores the layout.  When the whole scan
+runs kernel-side, keep the lane-major layout across levels instead (see
+``scan_combine_fn``) so the transposes happen once, not per level.
+
+On non-TPU backends (this container) ``interpret=True`` executes the kernel
+body with the Pallas interpreter -- bit-accurate semantics, no Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import LQTElement
+
+from .kernel import lqt_combine_lanes
+
+
+def _to_lanes(e: LQTElement):
+    return (
+        jnp.transpose(e.A, (1, 2, 0)),
+        jnp.transpose(e.b, (1, 0)),
+        jnp.transpose(e.C, (1, 2, 0)),
+        jnp.transpose(e.eta, (1, 0)),
+        jnp.transpose(e.J, (1, 2, 0)),
+    )
+
+
+def _from_lanes(ops) -> LQTElement:
+    A, b, C, eta, J = ops
+    return LQTElement(
+        jnp.transpose(A, (2, 0, 1)), jnp.transpose(b, (1, 0)),
+        jnp.transpose(C, (2, 0, 1)), jnp.transpose(eta, (1, 0)),
+        jnp.transpose(J, (2, 0, 1)))
+
+
+def _pad_lanes(ops, pad):
+    if pad == 0:
+        return ops
+    out = []
+    for a in ops:
+        width = [(0, 0)] * (a.ndim - 1) + [(0, pad)]
+        out.append(jnp.pad(a, width))
+    return tuple(out)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def lqt_combine_batched(e1: LQTElement, e2: LQTElement, *,
+                        block_b: int = 512,
+                        interpret: bool = False) -> LQTElement:
+    """Kernel-backed eq. (42) combine on (B, nx, nx)-layout elements."""
+    B = e1.A.shape[0]
+    if B == 0:  # associative_scan emits empty combines at some tree levels
+        return e1
+    bb = min(block_b, max(8, B))
+    pad = (-B) % bb
+    ops1 = _pad_lanes(_to_lanes(e1), pad)
+    ops2 = _pad_lanes(_to_lanes(e2), pad)
+    # padded lanes carry zeros: C1 J2 = 0 -> M = I, well-defined garbage-free
+    out = lqt_combine_lanes(ops1, ops2, block_b=bb, interpret=interpret)
+    out = tuple(a[..., :B] for a in out)
+    return _from_lanes(out)
+
+
+def scan_combine_fn(*, block_b: int = 512, interpret: bool = False):
+    """Combine callable for ``repro.core.pscan`` scans: kernel-backed and
+    broadcast-compatible (rank-promotes a carried single element)."""
+
+    def fn(a: LQTElement, b: LQTElement) -> LQTElement:
+        def rank_of(e):
+            return e.A.ndim
+
+        if rank_of(a) == 2 and rank_of(b) == 3:
+            a = jax.tree_util.tree_map(
+                lambda x, y: jnp.broadcast_to(x, y.shape), a, b)
+        elif rank_of(b) == 2 and rank_of(a) == 3:
+            b = jax.tree_util.tree_map(
+                lambda x, y: jnp.broadcast_to(x, y.shape), b, a)
+        if rank_of(a) == 2:
+            a3 = jax.tree_util.tree_map(lambda x: x[None], a)
+            b3 = jax.tree_util.tree_map(lambda x: x[None], b)
+            out = lqt_combine_batched(a3, b3, block_b=8,
+                                      interpret=interpret)
+            return jax.tree_util.tree_map(lambda x: x[0], out)
+        return lqt_combine_batched(a, b, block_b=block_b,
+                                   interpret=interpret)
+
+    return fn

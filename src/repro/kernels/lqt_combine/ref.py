@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the batched LQT combination (paper eq. 42).
+
+This is the same math as :func:`repro.core.combine.lqt_combine`, exposed in
+the kernel's batched-array calling convention: five (B, nx, nx)/(B, nx)
+arrays per operand side.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.combine import lqt_combine as _core_combine
+from repro.core.types import LQTElement
+
+
+def lqt_combine_ref(A1, b1, C1, eta1, J1, A2, b2, C2, eta2, J2):
+    out = _core_combine(
+        LQTElement(A1, b1, C1, eta1, J1), LQTElement(A2, b2, C2, eta2, J2))
+    return tuple(out)

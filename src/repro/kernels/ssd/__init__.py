@@ -1,0 +1,2 @@
+from .ops import ssd, ssd_trainable
+from .ref import ssd_ref

@@ -1,0 +1,67 @@
+"""Jitted wrapper around the chunked-SSD Pallas kernel.
+
+Handles layout (batch/head flattening, group -> head broadcast), padding of
+the sequence to the chunk size, the D skip connection, and the differential
+path: the kernel carries a ``jax.custom_vjp`` whose backward pass uses the
+reference implementation's VJP (forward speed is the production concern;
+training on TPU can swap in a dedicated backward kernel without touching
+callers).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_chunked
+from .ref import ssd_ref
+
+
+def _prep(x, dt, A, B, C):
+    b, L, H, P = x.shape
+    G, S = B.shape[2], B.shape[3]
+    rep = H // G
+    l = (dt * A[None, None, :]).transpose(0, 2, 1).reshape(b * H, L)
+    dtx = (dt[..., None] * x).transpose(0, 2, 1, 3).reshape(b * H, L, P)
+    Bh = jnp.repeat(B, rep, axis=2).transpose(0, 2, 1, 3).reshape(b * H, L, S)
+    Ch = jnp.repeat(C, rep, axis=2).transpose(0, 2, 1, 3).reshape(b * H, L, S)
+    return l, dtx, Bh, Ch
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, B, C, D=None, *, chunk: int = 128,
+        interpret: bool = False):
+    """Chunked SSD forward (see ref.ssd_ref for the semantics)."""
+    b, L, H, P = x.shape
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    l, dtx, Bh, Ch = _prep(x, dt, A, B, C)
+    y = ssd_chunked(l, dtx, Bh, Ch, chunk=chunk, interpret=interpret)
+    y = y.reshape(b, H, L + pad, P).transpose(0, 2, 1, 3)[:, :L]
+    if D is not None:
+        y = y + D[None, None, :, None] * x[:, :L]
+    return y
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def ssd_trainable(x, dt, A, B, C, D, chunk=128, interpret=False):
+    return ssd(x, dt, A, B, C, D, chunk=chunk, interpret=interpret)
+
+
+def _fwd(x, dt, A, B, C, D, chunk, interpret):
+    y = ssd_trainable(x, dt, A, B, C, D, chunk, interpret)
+    return y, (x, dt, A, B, C, D)
+
+
+def _bwd(chunk, interpret, res, g):
+    x, dt, A, B, C, D = res
+    _, vjp = jax.vjp(lambda *a: ssd_ref(*a), x, dt, A, B, C, D)
+    return vjp(g)
+
+
+ssd_trainable.defvjp(_fwd, _bwd)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the chunked SSD (state-space dual) scan.
+
+The SSD recurrence IS the paper's affine trajectory recursion (eqs. 45-46)
+with a DIAGONAL (here scalar-per-head) transition:
+
+    h_t = exp(dt_t A_h) h_{t-1} + dt_t x_t (x) B_t        (Phi, beta)
+    y_t = h_t C_t^T  (+ D_h x_t)
+
+This reference computes it with a plain sequential ``lax.scan`` -- exact,
+O(L) span -- and is the oracle for both the Pallas kernel and the chunked
+jnp implementation used by the model stack.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C, D=None):
+    """Sequential SSD scan.
+
+    Args:
+      x:  (batch, L, H, P)
+      dt: (batch, L, H)      positive step sizes (already softplus'ed)
+      A:  (H,)               negative per-head decay rates
+      B:  (batch, L, G, S)   input projections (G groups, H % G == 0)
+      C:  (batch, L, G, S)   output projections
+      D:  optional (H,)      skip connection
+    Returns:
+      y: (batch, L, H, P)
+    """
+    b, L, H, P = x.shape
+    G = B.shape[2]
+    S = B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2)   # (b, L, H, S)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    def per_seq(xs, dts, Bs, Cs):
+        def step(h, inp):
+            xk, dtk, Bk, Ck = inp          # (H,P), (H,), (H,S), (H,S)
+            a = jnp.exp(dtk * A)           # (H,)
+            h = a[:, None, None] * h + (dtk[:, None] * xk)[..., None] * Bk[:, None, :]
+            y = jnp.einsum("hps,hs->hp", h, Ck)
+            return h, y
+
+        h0 = jnp.zeros((H, P, S), dtype=jnp.promote_types(xs.dtype, jnp.float32))
+        _, ys = jax.lax.scan(step, h0, (xs, dts, Bs, Cs))
+        return ys
+
+    y = jax.vmap(per_seq)(x, dt, Bh, Ch)
+    y = y.astype(x.dtype)
+    if D is not None:
+        y = y + D[None, None, :, None] * x
+    return y

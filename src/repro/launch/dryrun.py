@@ -1,0 +1,384 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and record memory/cost/collective analyses.
+
+MUST be executed as its own process (``python -m repro.launch.dryrun``):
+the first two lines force 512 host platform devices BEFORE any jax import,
+which is why nothing above them may import repro or jax.
+
+Per cell:
+  * build the step function (train_step / prefill_step / serve_step),
+  * derive in/out NamedShardings from the logical axes,
+  * ``jax.jit(step, ...).lower(**input_specs).compile()``,
+  * record ``compiled.memory_analysis()``, ``compiled.cost_analysis()``
+    and the per-collective byte totals parsed from the post-optimisation
+    HLO (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute) into artifacts/dryrun/<mesh>/<arch>/<shape>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch mamba2-370m --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--cells a,b,...]
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+    "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _line_bytes(header: str) -> int:
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(header):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        nbytes += n * _DTYPE_BYTES[dt]
+    return nbytes
+
+
+def _split_computations(hlo_text: str) -> dict:
+    """computation name -> list of body lines (post-optimisation HLO)."""
+    comps = {}
+    cur, buf = None, []
+    header_re = re.compile(r"^(?:ENTRY\s+)?%?([\w\-\.]+)\s*(?:\(.*)?\{")
+    for line in hlo_text.splitlines():
+        if cur is None:
+            m = header_re.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur, buf = m.group(1), []
+                if "ENTRY" in line:
+                    cur = "__entry__"
+        else:
+            if line.strip() == "}":
+                comps[cur] = buf
+                cur = None
+            else:
+                buf.append(line.strip())
+    return comps
+
+
+def _collective_bytes(hlo_text: str) -> dict:
+    """Loop-aware collective accounting.
+
+    XLA while-loop bodies execute trip-count times but appear once in the
+    text, so naive per-line sums undercount collectives inside the layer
+    scan.  This walks the computation graph: per-computation collective
+    bytes, while-op (condition, body) edges with trip counts recovered
+    from the condition's loop-bound constant, recursively multiplied.
+    """
+    comps = _split_computations(hlo_text)
+    own = {name: {k: 0 for k in _COLL_KINDS} for name in comps}
+    own_counts = {name: {k: 0 for k in _COLL_KINDS} for name in comps}
+    whiles = {name: [] for name in comps}   # (cond, body) per while op
+    while_re = re.compile(
+        r"condition=%?([\w\-\.]+).*body=%?([\w\-\.]+)")
+
+    for name, lines in comps.items():
+        for s in lines:
+            m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)", s)
+            if not m:
+                continue
+            rhs = m.group(1)
+            if " while(" in rhs or rhs.startswith("while("):
+                wm = while_re.search(rhs)
+                if wm:
+                    whiles[name].append((wm.group(1), wm.group(2)))
+                continue
+            for k in _COLL_KINDS:
+                if re.search(rf"\b{k}(-start)?\(", rhs):
+                    paren = rhs.find("(")
+                    own[name][k] += _line_bytes(rhs[:paren])
+                    own_counts[name][k] += 1
+                    break
+
+    def trip_count(cond_name: str) -> int:
+        best = 1
+        for s in comps.get(cond_name, []):
+            for m in re.finditer(r"constant\((\d+)\)", s):
+                best = max(best, int(m.group(1)))
+        return best
+
+    import functools as _ft
+
+    @_ft.lru_cache(maxsize=None)
+    def total(name: str) -> tuple:
+        t = dict(own.get(name, {k: 0 for k in _COLL_KINDS}))
+        c = dict(own_counts.get(name, {k: 0 for k in _COLL_KINDS}))
+        for cond, body in whiles.get(name, []):
+            n = trip_count(cond)
+            bt, bc = total(body)
+            for k in _COLL_KINDS:
+                t[k] += n * bt[k]
+                c[k] += n * bc[k]
+        return t, c
+
+    entry = "__entry__" if "__entry__" in comps else (
+        next(iter(comps)) if comps else "")
+    tot, counts = total(entry) if entry else (
+        {k: 0 for k in _COLL_KINDS}, {k: 0 for k in _COLL_KINDS})
+    flat = {name: sum(v.values()) for name, v in own.items()
+            if sum(v.values())}
+    return {
+        "bytes": {k: int(v) for k, v in tot.items()},
+        "counts": {k: int(v) for k, v in counts.items()},
+        "total_bytes": int(sum(tot.values())),
+        "naive_bytes": int(sum(sum(v.values()) for v in own.values())),
+        "per_computation_naive": flat,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str, model_kw: dict | None = None,
+             tag: str = "", overrides: dict | None = None,
+             microbatches: int | None = None) -> dict:
+    from repro.config import (
+        SHAPE_SUITE, TrainConfig, get_config, shape_skip_reason)
+    from repro.distributed.sharding import (
+        choose_pspec, mesh_context, tree_shardings)
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import cache_pspecs, make_step
+    from repro.models import transformer
+    from repro.train.trainer import make_shardings
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    import dataclasses
+
+    cfg = get_config(arch)
+    if overrides:
+        typed = {}
+        for k, v in overrides.items():
+            cur = getattr(cfg, k)
+            if isinstance(cur, bool):
+                typed[k] = str(v).lower() in ("1", "true", "yes")
+            elif isinstance(cur, int):
+                typed[k] = int(v)
+            elif isinstance(cur, float):
+                typed[k] = float(v)
+            else:
+                typed[k] = v
+        cfg = dataclasses.replace(cfg, **typed)
+    shape = next(s for s in SHAPE_SUITE if s.name == shape_name)
+    mesh_name = "pod512" if multi_pod else "pod256"
+    record_overrides = dict(overrides or {})
+    record: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "tag": tag,
+        "overrides": record_overrides,
+    }
+    reason = shape_skip_reason(cfg, shape)
+    if reason:
+        record["status"] = "skipped"
+        record["skip_reason"] = reason
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # microbatched gradient accumulation keeps activations on-chip (8 x
+    # 512-token microbatches per step at train_4k); see EXPERIMENTS.md
+    # SPerf iteration 0.  dp-only uses microbatches=1 (per-device batch
+    # is already a single sequence).
+    dp_only = cfg.parallel_policy == "dp_only"
+    default_mb = 8 if (shape.kind == "train" and not dp_only) else 1
+    tcfg = TrainConfig(
+        zero1=True,
+        microbatches=microbatches or default_mb)
+    ctx_kw = {}
+    if dp_only:
+        from repro.distributed.sharding import MODEL_PRIORITY
+        ctx_kw = dict(batch_axes=("pod", "data", "model"),
+                      tp_exclude=frozenset(MODEL_PRIORITY)
+                      - {"vocab", "embed_model"})
+    t0 = time.time()
+    try:
+        with mesh_context(mesh, **ctx_kw):
+            step_fn, specs = make_step(cfg, shape, tcfg,
+                                       **(model_kw or {}))
+            p_shard, o_shard = make_shardings(cfg, tcfg, mesh)
+
+            def b_shard(spec_tree):
+                return jax.tree_util.tree_map(
+                    lambda s: NamedSharding(
+                        mesh, choose_pspec(
+                            s.shape, ("batch",) + (None,) * (len(s.shape) - 1),
+                            mesh)),
+                    spec_tree)
+
+            cache_sh = jax.tree_util.tree_map(
+                lambda p: NamedSharding(mesh, p),
+                cache_pspecs(cfg, mesh, shape.global_batch),
+                is_leaf=lambda x: isinstance(x, P))
+            out_sh = None
+            if shape.kind == "train":
+                in_sh = (p_shard, o_shard, b_shard(specs["batch"]))
+                args = (specs["params"], specs["opt"], specs["batch"])
+                out_sh = (p_shard, o_shard, None)
+            elif shape.kind == "prefill":
+                in_sh = (p_shard, b_shard(specs["batch"]))
+                args = (specs["params"], specs["batch"])
+                out_sh = (None, cache_sh)
+            else:
+                in_sh = (p_shard,
+                         b_shard(specs["tokens"]),
+                         cache_sh)
+                args = (specs["params"], specs["tokens"], specs["caches"])
+                out_sh = (None, cache_sh)
+
+            donate = (0, 1) if shape.kind == "train" else ()
+            jitted = jax.jit(step_fn, in_shardings=in_sh,
+                             out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            coll = _collective_bytes(hlo)
+            # archive the optimised HLO for offline re-analysis
+            try:
+                import zstandard as zstd
+                hdir = os.path.join(os.path.dirname(out_dir), "hlo")
+                os.makedirs(hdir, exist_ok=True)
+                tagpart = f"-{tag}" if tag else ""
+                hpath = os.path.join(
+                    hdir, f"{mesh_name}--{arch}--{shape_name}{tagpart}"
+                          ".hlo.zst")
+                with open(hpath, "wb") as f:
+                    f.write(zstd.ZstdCompressor(level=9).compress(
+                        hlo.encode()))
+                record["hlo_path"] = hpath
+            except Exception:
+                pass
+
+        record.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory_analysis": {
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes",
+                          "output_size_in_bytes",
+                          "temp_size_in_bytes",
+                          "generated_code_size_in_bytes")
+                if hasattr(mem, k)
+            },
+            "cost_analysis": {
+                k: float(v) for k, v in (cost or {}).items()
+                if isinstance(v, (int, float)) and (
+                    k in ("flops", "transcendentals")
+                    or k.startswith("bytes accessed"))
+            },
+            "collectives": coll,
+            "num_devices": mesh.devices.size,
+        })
+    except Exception as e:  # record the failure; the suite reports it
+        record["status"] = "failed"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        # XLA SPMD has a verifier bug with the microbatch scan over
+        # odd-vocab embed-sharded models (hymba: vocab 32001); retry the
+        # cell unmicrobatched before reporting failure.
+        if (shape.kind == "train" and tcfg.microbatches > 1
+                and microbatches is None):
+            retry = run_cell(arch, shape_name, multi_pod, out_dir,
+                             model_kw=model_kw, tag=tag,
+                             overrides=overrides, microbatches=1)
+            if retry.get("status") == "ok":
+                retry["note"] = ("microbatches=1 fallback (XLA SPMD "
+                                 "verifier bug at microbatches=8)")
+                return retry
+    return record
+
+
+def _write(record, out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"-{record['tag']}" if record.get("tag") else ""
+    path = os.path.join(
+        out_dir,
+        f"{record['mesh']}--{record['arch']}--{record['shape']}{tag}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--causal-skip", action="store_true",
+                    help="triangular causal schedule (perf variant)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig override key=value (repeatable), "
+                         "e.g. --set seq_parallel=true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    args = ap.parse_args()
+    overrides = dict(kv.split("=", 1) for kv in getattr(args, "set"))
+
+    from repro.config import SHAPE_SUITE
+    from repro.configs import ARCHS
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for s in SHAPE_SUITE:
+                cells.append((arch, s.name))
+    else:
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    model_kw = {"causal_skip": True} if args.causal_skip else None
+    failures = 0
+    for multi_pod in meshes:
+        for arch, shape in cells:
+            rec = run_cell(arch, shape, multi_pod, args.out,
+                           model_kw=model_kw, tag=args.tag,
+                           overrides=overrides,
+                           microbatches=args.microbatches)
+            path = _write(rec, args.out)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                extra = (f" flops={rec['cost_analysis'].get('flops', 0):.3g}"
+                         f" coll={rec['collectives']['total_bytes']:.3g}B"
+                         f" compile={rec['compile_s']}s")
+            elif status == "failed":
+                failures += 1
+                extra = " " + rec["error"][:160]
+            print(f"[dryrun] {rec['mesh']} {arch} {shape}: "
+                  f"{status}{extra}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

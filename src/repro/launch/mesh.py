@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level state) so importing this module never touches
+jax device initialisation; the dry-run sets XLA_FLAGS before first import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) over ("data", "model") = 256 chips.
+    Multi-pod: (2, 16, 16) over ("pod", "data", "model") = 512 chips;
+    the pod axis folds into data parallelism (gradient reductions cross
+    the inter-pod links; see DESIGN.md S5)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever this process actually has (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

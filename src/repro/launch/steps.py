@@ -1,0 +1,152 @@
+"""Step functions + ShapeDtypeStruct input specs for every dry-run cell.
+
+``input_specs(cfg, shape)`` returns exactly the abstract arrays the cell's
+step function consumes (weak-type-correct, shardable, no allocation); the
+dry-run lowers ``jax.jit(step).lower(**specs)`` and compiles.
+
+Cell kinds:
+  train   -> ``train_step``  (loss + grads + AdamW update)
+  prefill -> ``prefill_step`` (full forward, last-token logits + caches)
+  decode  -> ``serve_step``  (one token against a seq_len-deep cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import transformer
+from repro.train.optimizer import AdamWState, adamw_init
+from repro.train.trainer import make_train_step
+
+
+def _dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        specs = {}
+        if cfg.input_mode == "embeddings":
+            specs["embeddings"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), _dtype(cfg))
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return specs
+    # decode: one token + caches of depth seq_len
+    return {"tokens": jax.ShapeDtypeStruct((B,), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    caches = jax.eval_shape(
+        lambda: transformer.init_caches(cfg, shape.global_batch,
+                                        shape.seq_len))
+    return caches
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: transformer.init(cfg, jax.random.PRNGKey(0)))
+
+
+def opt_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: adamw_init(transformer.init(cfg, jax.random.PRNGKey(0))))
+
+
+def make_step(cfg: ModelConfig, shape: ShapeConfig, tcfg: TrainConfig,
+              **model_kw):
+    """Returns (step_fn, example_kwargs_specs) for the cell."""
+    if shape.kind == "train":
+        loss_fn = functools.partial(
+            transformer.train_loss, cfg=cfg, **model_kw)
+        inner = make_train_step(cfg, tcfg, loss_fn)
+
+        def train_step(params, opt, batch):
+            return inner(params, opt, batch)
+
+        specs = {
+            "params": params_specs(cfg),
+            "opt": opt_specs(cfg),
+            "batch": batch_specs(cfg, shape),
+        }
+        return train_step, specs
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return transformer.prefill(
+                params, batch, cfg, max_len=shape.seq_len, **model_kw)
+
+        return prefill_step, {
+            "params": params_specs(cfg),
+            "batch": batch_specs(cfg, shape),
+        }
+
+    def serve_step(params, tokens, caches):
+        return transformer.decode_step(params, tokens, caches, cfg)
+
+    return serve_step, {
+        "params": params_specs(cfg),
+        "tokens": batch_specs(cfg, shape)["tokens"],
+        "caches": cache_specs(cfg, shape),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                tcfg: TrainConfig = None) -> Dict[str, Any]:
+    _, specs = make_step(cfg, shape, tcfg or TrainConfig())
+    return specs
+
+
+def cache_pspecs(cfg: ModelConfig, mesh, global_batch: int = 0):
+    """PartitionSpecs for the stacked decode caches.
+
+    Leading axis is LAYERS (the decode scan) -- never sharded; batch over
+    (pod, data) with progressive fallback when the batch does not divide
+    (long_500k has batch 1); kv/ssm heads over model with head_dim
+    fallback (the same divisibility rule as the weights).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models.attention import KVCache
+    from repro.models.ssm import SSMCache
+    from repro.models.transformer import LayerCaches
+
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    while data_axes and global_batch:
+        size = 1
+        for a in data_axes:
+            size *= mesh.shape[a]
+        if global_batch % size == 0:
+            break
+        data_axes = data_axes[1:]
+    d = (data_axes if len(data_axes) > 1 else
+         (data_axes[0] if data_axes else None))
+    m = mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+    attn = ssm = None
+    if cfg.mixer in ("attn", "hybrid"):
+        if cfg.num_kv_heads % m == 0:
+            kv = P(None, d, "model", None, None)
+        elif cfg.hd % m == 0 and not cfg.kv_replicate:
+            kv = P(None, d, None, None, "model")
+        else:
+            kv = P(None, d, None, None, None)
+        attn = KVCache(k=kv, v=kv, pos=P(None))
+    if cfg.mixer in ("ssm", "hybrid"):
+        conv_dim = cfg.ssm_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        conv = P(None, d, None, "model" if conv_dim % m == 0 else None)
+        if cfg.ssm_heads % m == 0:
+            state = P(None, d, "model", None, None)
+        elif cfg.ssm_head_dim % m == 0:
+            state = P(None, d, None, "model", None)
+        else:
+            state = P(None, d, None, None, None)
+        ssm = SSMCache(conv=conv, state=state)
+    return LayerCaches(attn, ssm)

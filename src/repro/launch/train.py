@@ -1,0 +1,55 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m-smoke \
+        --steps 50 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+
+Runs on whatever devices the process has (CPU here, TPU pod in prod);
+under multi-device meshes the step is jitted with the logical shardings
+from ``repro.distributed.sharding`` (see train/trainer.py).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.config import TrainConfig, get_config
+from repro.train.data import LMDataPipeline
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m-smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    tcfg = TrainConfig(
+        learning_rate=args.lr, total_steps=args.steps,
+        warmup_steps=max(args.steps // 10, 1),
+        seq_len=args.seq, global_batch=args.batch,
+        microbatches=args.microbatches, seed=args.seed,
+        checkpoint_every=args.ckpt_every, log_every=args.log_every)
+    pipeline = LMDataPipeline(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, seed=args.seed,
+        embed_dim=cfg.d_model if cfg.input_mode == "embeddings" else 0)
+    trainer = Trainer(cfg=cfg, tcfg=tcfg, pipeline=pipeline,
+                      ckpt_dir=args.ckpt_dir)
+    print(f"[train] arch={cfg.name} params={cfg.param_count():,} "
+          f"devices={jax.device_count()}")
+    trainer.run(args.steps)
+
+
+if __name__ == "__main__":
+    main()

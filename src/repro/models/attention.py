@@ -1,0 +1,237 @@
+"""Attention mixer: GQA, RoPE, qk-norm, sliding window, chunked streaming.
+
+Two execution paths:
+
+* ``chunked_mha`` -- pure-JAX streaming-softmax attention (double scan over
+  q/kv chunks).  Never materialises the (L, L) logits, so 32k-sequence
+  cells compile within the per-device HBM budget.  This is the path the
+  multi-pod dry-run lowers (the CPU backend cannot lower Mosaic kernels);
+  on TPU the Pallas ``repro.kernels.flash_attention`` kernel replaces it
+  via ``use_kernel=True``.
+* decode path -- single-token attention against a (possibly rolling) KV
+  cache; O(L) work, no chunking needed.
+
+GQA is computed WITHOUT repeating K/V: q is reshaped to
+(B, Hkv, rep, L, D) and contracted group-wise.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import logical_constraint
+
+from .layers import P, apply_rope, rms_norm, rope_freqs
+
+_NEG = -1e30
+
+
+def attn_spec(cfg: ModelConfig) -> dict:
+    D, Hq, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    kv_tail = None if cfg.kv_replicate else "head"
+    spec = {
+        "wq": P((D, Hq, hd), ("embed", "heads", "head")),
+        "wk": P((D, Hkv, hd), ("embed", "kv_heads", kv_tail)),
+        "wv": P((D, Hkv, hd), ("embed", "kv_heads", kv_tail)),
+        "wo": P((Hq, hd, D), ("heads", "head", "embed"), fan_in=Hq * hd),
+    }
+    if cfg.qk_norm:
+        spec["q_norm"] = P((hd,), ("head",), init="ones")
+        spec["k_norm"] = P((hd,), ("head",), init="ones")
+    return spec
+
+
+class KVCache(NamedTuple):
+    """Dense or rolling-window KV cache for one layer.
+
+    k, v: (B, Hkv, W, hd) where W = window or max context; ``pos`` is the
+    number of tokens already absorbed (same for every batch row under the
+    continuous-batching engine's padding discipline).
+    """
+    k: jnp.ndarray
+    v: jnp.ndarray
+    pos: jnp.ndarray   # () int32
+
+
+def chunked_mha(q, k, v, *, causal: bool, window: Optional[int],
+                chunk_q: int = 512, chunk_k: int = 512,
+                causal_skip: bool = False):
+    """Streaming-softmax attention, (B, Hq, Lq, D) x (B, Hkv, Lk, D).
+
+    ``causal_skip=True`` enables the triangular schedule: strictly-upper
+    kv chunks are skipped entirely (halves the logit FLOPs for causal
+    self-attention; used by the perf-optimised path, see EXPERIMENTS.md
+    SPerf).
+    """
+    B, Hq, Lq, D = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    scale = D ** -0.5
+    cq = min(chunk_q, Lq)
+    ck = min(chunk_k, Lk)
+    assert Lq % cq == 0 and Lk % ck == 0, (Lq, cq, Lk, ck)
+    nq, nk = Lq // cq, Lk // ck
+    off = Lk - Lq  # q rows aligned to the end of the keys
+
+    qg = q.reshape(B, Hkv, rep, Lq, D)
+
+    def q_block(qi, qc):
+        # qc: (B, Hkv, rep, cq, D)
+        m0 = jnp.full((B, Hkv, rep, cq), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, rep, cq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, rep, cq, D), jnp.float32)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(k, kj * ck, ck, axis=2)
+            vc = jax.lax.dynamic_slice_in_dim(v, kj * ck, ck, axis=2)
+            s = jnp.einsum("bgrqd,bgkd->bgrqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            rows = off + qi * cq + jnp.arange(cq)[:, None]
+            cols = kj * ck + jnp.arange(ck)[None, :]
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= rows >= cols
+            if window is not None:
+                mask &= (rows - cols) < window
+            s = jnp.where(mask[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bgrqk,bgkd->bgrqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        if causal and causal_skip:
+            # only kv chunks intersecting the causal band of this q chunk
+            hi = (off + (qi + 1) * cq + ck - 1) // ck
+            lo = 0
+            if window is not None:
+                lo = jnp.maximum(
+                    0, (off + qi * cq - (window - 1)) // ck)
+                # dynamic lo needs a static-length scan; fall back to hi-only
+                lo = 0
+            length = nk  # static upper bound
+            idx = jnp.arange(length)
+
+            def guarded(carry, kj):
+                do = kj < hi
+                new, _ = kv_step(carry, jnp.minimum(kj, nk - 1))
+                out = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(do, a, b), new, carry)
+                return out, None
+
+            (m, l, acc), _ = jax.lax.scan(guarded, (m0, l0, a0), idx)
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype)
+
+    # flash-style backward: recompute each q-chunk's kv sweep instead of
+    # storing (nq, nk, ...) probability tiles (multi-GB at 4k+ contexts)
+    q_block_ckpt = jax.checkpoint(q_block, static_argnums=())
+
+    def scan_q(_, qi):
+        qc = jax.lax.dynamic_slice_in_dim(qg, qi * cq, cq, axis=3)
+        return None, q_block_ckpt(qi, qc)
+
+    _, blocks = jax.lax.scan(scan_q, None, jnp.arange(nq))
+    # blocks: (nq, B, Hkv, rep, cq, D)
+    out = jnp.moveaxis(blocks, 0, 3).reshape(B, Hkv, rep, Lq, D)
+    return out.reshape(B, Hq, Lq, D)
+
+
+def attention_forward(params, x, cfg: ModelConfig, positions, *,
+                      use_kernel: bool = False, interpret: bool = False,
+                      causal_skip: bool = False):
+    """Full-sequence attention (train / prefill).  x: (B, L, D)."""
+    B, L, D = x.shape
+    q = jnp.einsum("bld,dhk->blhk", x, params["wq"])
+    k = jnp.einsum("bld,dhk->blhk", x, params["wk"])
+    v = jnp.einsum("bld,dhk->blhk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    cos, sin = rope_freqs(positions, cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, cos[:, None], sin[:, None])
+    k = apply_rope(k, cos[:, None], sin[:, None])
+    q = logical_constraint(q.transpose(0, 2, 1, 3),
+                           "batch", "heads", None, None)
+    k = logical_constraint(k.transpose(0, 2, 1, 3),
+                           "batch", "kv_heads", None, None)
+    v = logical_constraint(v.transpose(0, 2, 1, 3),
+                           "batch", "kv_heads", None, None)
+    causal = cfg.causal and not cfg.is_encoder
+    if use_kernel:
+        from repro.kernels.flash_attention import attention_trainable
+        o = attention_trainable(q, k, v, causal, cfg.window, interpret)
+    else:
+        o = chunked_mha(q, k, v, causal=causal, window=cfg.window,
+                        causal_skip=causal_skip)
+    o = o.transpose(0, 2, 1, 3)  # (B, L, Hq, hd)
+    out = jnp.einsum("blhk,hkd->bld", o, params["wo"])
+    return logical_constraint(out, "batch", None, None)
+
+
+def attention_decode(params, x, cfg: ModelConfig, cache: KVCache):
+    """One-token attention against the cache.  x: (B, 1, D)."""
+    B = x.shape[0]
+    W = cache.k.shape[2]
+    q = jnp.einsum("bld,dhk->blhk", x, params["wq"])
+    k_new = jnp.einsum("bld,dhk->blhk", x, params["wk"])
+    v_new = jnp.einsum("bld,dhk->blhk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k_new = rms_norm(k_new, params["k_norm"], cfg.norm_eps)
+    pos = cache.pos
+    cos, sin = rope_freqs(pos[None].astype(jnp.float32), cfg.hd,
+                          cfg.rope_theta)
+    q = apply_rope(q, cos[:, None], sin[:, None])
+    k_new = apply_rope(k_new, cos[:, None], sin[:, None])
+
+    slot = pos % W if cfg.window is not None else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.transpose(0, 2, 1, 3), slot, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.transpose(0, 2, 1, 3), slot, axis=2)
+
+    qh = q.transpose(0, 2, 1, 3)   # (B, Hq, 1, hd)
+    rep = cfg.num_heads // cfg.num_kv_heads
+    qg = qh.reshape(B, cfg.num_kv_heads, rep, 1, cfg.hd)
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * (cfg.hd ** -0.5)
+    idx = jnp.arange(W)
+    if cfg.window is None:
+        valid = idx <= pos
+    else:
+        # rolling cache: slot s holds position pos - ((pos%W - s) mod W)
+        age = jnp.mod(pos % W - idx, W)
+        valid = age <= pos
+    s = jnp.where(valid.reshape(1, 1, 1, 1, W), s, _NEG)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    o = jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(v_cache.dtype), v_cache)
+    o = o.reshape(B, cfg.num_heads, 1, cfg.hd).transpose(0, 2, 1, 3)
+    out = jnp.einsum("blhk,hkd->bld", o, params["wo"])
+    return out, KVCache(k_cache, v_cache, pos + 1)
+
+
+def _unrolled_positions(idx, pos, W):
+    """True token position stored in each rolling-cache slot."""
+    cur_slot = pos % W
+    # slot s holds position: pos - ((cur_slot - s) mod W)
+    return pos - jnp.mod(cur_slot - idx, W)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    W = min(max_len, cfg.window) if cfg.window else max_len
+    shape = (batch, cfg.num_kv_heads, W, cfg.hd)
+    return KVCache(
+        jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+        jnp.zeros((), jnp.int32))

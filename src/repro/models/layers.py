@@ -1,0 +1,99 @@
+"""Shared model building blocks: param specs, norms, RoPE, embeddings.
+
+Parameters are plain nested dicts of arrays.  Every module defines its
+parameters once as a ``spec`` (shape + logical axes + init), from which both
+the initialised tree and the logical-axes tree are derived -- keeping the
+sharding metadata impossible to drift from the parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """One parameter: shape, logical axes, init ('normal'|'zeros'|'ones'),
+    fan_in (for 1/sqrt(fan_in) scaling; None -> first dim)."""
+    shape: tuple
+    axes: tuple
+    init: str = "normal"
+    fan_in: Optional[int] = None
+
+
+def init_params(key, spec: dict, dtype) -> dict:
+    flat = jax.tree_util.tree_leaves(
+        spec, is_leaf=lambda x: isinstance(x, P))
+    keys = jax.random.split(key, max(len(flat), 1))
+    it = iter(keys)
+
+    def mk(p: P):
+        k = next(it)
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dtype)
+        if p.init == "ones":
+            return jnp.ones(p.shape, dtype)
+        fan = p.fan_in if p.fan_in is not None else p.shape[0]
+        scale = 1.0 / math.sqrt(max(fan, 1))
+        return (jax.random.normal(k, p.shape, jnp.float32) * scale
+                ).astype(dtype)
+
+    return jax.tree_util.tree_map(
+        mk, spec, is_leaf=lambda x: isinstance(x, P))
+
+
+def params_axes(spec: dict) -> dict:
+    return jax.tree_util.tree_map(
+        lambda p: p.axes, spec, is_leaf=lambda x: isinstance(x, P))
+
+
+def params_shapes(spec: dict) -> dict:
+    return jax.tree_util.tree_map(
+        lambda p: p.shape, spec, is_leaf=lambda x: isinstance(x, P))
+
+
+def stack_specs(spec: dict, num: int) -> dict:
+    """Prepend a stacked 'layers' axis (for scan-over-layers weights)."""
+    return jax.tree_util.tree_map(
+        lambda p: P((num,) + p.shape, ("layers",) + p.axes, p.init,
+                    p.fan_in if p.fan_in is not None else p.shape[0]),
+        spec, is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(positions, head_dim: int, theta: float):
+    """positions: (...,) -> cos, sin of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., L, H, D); cos/sin: (L, D//2) or broadcastable."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :] if x.ndim == cos.ndim + 2 else cos
+    s = sin[..., None, :] if x.ndim == sin.ndim + 2 else sin
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1).astype(x.dtype)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]

@@ -1,0 +1,103 @@
+"""Mixture-of-experts FFN: top-k routing, capacity dispatch, EP sharding.
+
+Dispatch is sort-based (Megablocks-style ranking, no (T, E) cumsum blow-up):
+token-slot assignments are ranked within their expert via a stable argsort;
+assignments past the per-expert capacity are dropped (their gate weight is
+lost, standard dropping-MoE semantics).  Expert compute is a dense
+(E, cap, D) x (E, D, F) einsum so GSPMD can shard the expert dimension over
+the model axis (EP) -- or fall back to sharding d_ff when E does not divide
+the axis (granite's 40 experts on a 16-way axis; DESIGN.md S5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import logical_constraint
+
+from .layers import P, activation
+
+
+def moe_spec(cfg: ModelConfig) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    spec = {
+        "router": P((D, E), ("embed", None)),
+        "wu": P((E, D, F), ("experts", "embed", "ff"), fan_in=D),
+        "wd": P((E, F, D), ("experts", "ff", "embed"), fan_in=F),
+    }
+    if cfg.mlp_type == "gated":
+        spec["wg"] = P((E, D, F), ("experts", "embed", "ff"), fan_in=D)
+    return spec
+
+
+def moe_forward(params, x, cfg: ModelConfig):
+    """x: (B, S, D) -> (B, S, D)."""
+    Bb, S, D = x.shape
+    E, K = cfg.moe_experts, cfg.moe_topk
+    T = Bb * S
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt, params["router"])
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)                     # (T, K)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # capacity: cf-scaled mean load, floored at K, ceiled at the no-drop
+    # bound T*K (tiny decode batches must never drop)
+    cap = int(max(K, (K * T / E) * cfg.moe_capacity_factor))
+    cap = min(cap, T * K)
+    # pad capacity to the lane width so the buffers tile cleanly
+    cap = (cap + 127) // 128 * 128 if cap > 128 else cap
+    cap = min(cap, T * K)
+
+    e_flat = idx.reshape(T * K)
+    # rank each assignment within its expert (stable -> earlier tokens win)
+    order = jnp.argsort(e_flat, stable=True)
+    sorted_e = e_flat[order]
+    start = jnp.searchsorted(sorted_e, jnp.arange(E))        # (E,)
+    rank_sorted = jnp.arange(T * K) - start[sorted_e]
+    rank = jnp.zeros((T * K,), jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))
+    keep = rank < cap
+    slot = jnp.where(keep, rank, cap - 1)
+
+    # scatter tokens into (E, cap, D); the capacity dim shards over the
+    # data axes (experts shard over model when E divides, DESIGN.md S5) --
+    # without the cap constraint XLA replicates multi-GB dispatch buffers
+    x_rep = jnp.repeat(xt[:, None], K, axis=1).reshape(T * K, D)
+    buf = jnp.zeros((E, cap, D), xt.dtype)
+    buf = buf.at[e_flat, slot].add(
+        jnp.where(keep[:, None], x_rep, 0), mode="drop")
+    buf = logical_constraint(buf, "experts", "batch", None)
+
+    act = activation(cfg.act)
+    up = jnp.einsum("ecd,edf->ecf", buf, params["wu"])
+    if cfg.mlp_type == "gated":
+        g = jnp.einsum("ecd,edf->ecf", buf, params["wg"])
+        hidden = act(g) * up
+    else:
+        hidden = act(up)
+    hidden = logical_constraint(hidden, "experts", "batch", "ff")
+    out_buf = jnp.einsum("ecf,efd->ecd", hidden, params["wd"])
+    out_buf = logical_constraint(out_buf, "experts", "batch", None)
+
+    gathered = out_buf[e_flat, slot]                          # (T*K, D)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    y = (gathered.reshape(T, K, D)
+         * gate.astype(gathered.dtype)[..., None]).sum(axis=1)
+    y = y.reshape(Bb, S, D)
+    return logical_constraint(y, "batch", None, None)
+
+
+def moe_aux_loss(params, x, cfg: ModelConfig):
+    """Load-balancing auxiliary loss (Switch-style)."""
+    Bb, S, D = x.shape
+    xt = x.reshape(Bb * S, D)
+    logits = jnp.einsum("td,de->te", xt, params["router"])
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    _, idx = jax.lax.top_k(probs, cfg.moe_topk)
+    onehot = jax.nn.one_hot(idx[:, 0], cfg.moe_experts, dtype=jnp.float32)
+    frac_tokens = onehot.mean(axis=0)
+    frac_probs = probs.mean(axis=0)
+    return cfg.moe_experts * jnp.sum(frac_tokens * frac_probs)

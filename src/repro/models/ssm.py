@@ -1,0 +1,298 @@
+"""Mamba2 (SSD) mixer -- built on the paper's affine scan.
+
+The SSD recurrence h_t = exp(dt A) h_{t-1} + dt x_t (x) B_t IS the paper's
+trajectory recursion (eqs. 45-46) with diagonal transition; the chunked
+training path reuses the same block-element decomposition: per-chunk
+elements (decay, state-increment) folded by an associative combine
+(``repro.core.combine.affine_combine`` specialised to diagonal Phi), with
+the intra-chunk part dense.  ``repro.kernels.ssd`` is the TPU kernel of the
+same algorithm; this module is the shardable pure-JAX path used by the
+dry-run and CPU smoke tests.
+
+Layer structure follows mamba2: in_proj -> [z | x | B | C | dt], short
+depthwise conv on (x,B,C), SSD scan, gated RMSNorm, out_proj.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import logical_constraint
+
+from .layers import P, rms_norm
+
+
+def ssm_spec(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    din = cfg.ssm_inner
+    gs = cfg.ssm_groups * cfg.ssm_state
+    H = cfg.ssm_heads
+    conv_dim = din + 2 * gs
+    common = {
+        "A_log": P((H,), ("ssm_heads",), init="ones"),
+        "D_skip": P((H,), ("ssm_heads",), init="ones"),
+        "dt_bias": P((H,), ("ssm_heads",), init="zeros"),
+        "gate_norm": P((din,), ("ssm_inner",), init="ones"),
+        "w_out": P((din, D), ("ssm_inner", "embed")),
+    }
+    if cfg.ssm_fused_proj:
+        return {
+            "w_in": P((D, 2 * din + 2 * gs + H), ("embed", "ssm_x")),
+            "conv_w": P((cfg.ssm_conv, conv_dim), (None, "ssm_x"),
+                        fan_in=cfg.ssm_conv),
+            "conv_b": P((conv_dim,), ("ssm_x",), init="zeros"),
+            **common,
+        }
+    # split projections: every stream sharded on its own clean axis
+    # (no splits/concats of model-sharded dims -> no halo exchanges;
+    # EXPERIMENTS.md SPerf mamba2 iteration)
+    return {
+        "w_z": P((D, din), ("embed", "ssm_inner")),
+        "w_x": P((D, din), ("embed", "ssm_inner")),
+        "w_B": P((D, gs), ("embed", "ssm_x")),
+        "w_C": P((D, gs), ("embed", "ssm_x")),
+        "w_dt": P((D, H), ("embed", "ssm_heads")),
+        "conv_x_w": P((cfg.ssm_conv, din), (None, "ssm_inner"),
+                      fan_in=cfg.ssm_conv),
+        "conv_x_b": P((din,), ("ssm_inner",), init="zeros"),
+        "conv_B_w": P((cfg.ssm_conv, gs), (None, "ssm_x"),
+                      fan_in=cfg.ssm_conv),
+        "conv_B_b": P((gs,), ("ssm_x",), init="zeros"),
+        "conv_C_w": P((cfg.ssm_conv, gs), (None, "ssm_x"),
+                      fan_in=cfg.ssm_conv),
+        "conv_C_b": P((gs,), ("ssm_x",), init="zeros"),
+        **common,
+    }
+
+
+class SSMCache(NamedTuple):
+    """Decode-time state: conv tail + SSD state (O(1) in context length)."""
+    conv: jnp.ndarray    # (B, conv_k - 1, conv_dim)
+    state: jnp.ndarray   # (B, H, P, S) f32
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    din = cfg.ssm_inner
+    gs = cfg.ssm_groups * cfg.ssm_state
+    z, xs, B, C, dt = jnp.split(
+        zxbcdt, [din, 2 * din, 2 * din + gs, 2 * din + 2 * gs], axis=-1)
+    return z, xs, B, C, dt
+
+
+def ssd_scan_jnp(x, dt, A, B, C, D, chunk: int):
+    """Chunked SSD in pure JAX: the paper's block-element + scan pattern.
+
+    Stage 1 builds per-chunk elements in parallel (the paper's per-block
+    element init), stage 2 folds them with an ASSOCIATIVE prefix scan
+    (eqs. 45-46, diagonal Phi), stage 3 emits per-chunk outputs under
+    ``lax.map`` so the (Q, Q, H) decay tensors exist one chunk at a time
+    (memory-bounded for 4k/32k sequences).
+
+    x: (b, L, H, P); dt: (b, L, H); A: (H,); B, C: (b, L, G, S); D: (H,).
+    """
+    from repro.core.pscan import prefix_scan
+
+    b, L0, H, Pd = x.shape
+    G, S = B.shape[2], B.shape[3]
+    rep = H // G
+    Q = min(chunk, L0)
+    pad = (-L0) % Q
+    if pad:  # dt=0 padding steps are exact identity elements
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    L = L0 + pad
+    nc = L // Q
+
+    f32 = jnp.float32
+    l = (dt.astype(f32) * A.astype(f32)[None, None, :])       # (b, L, H)
+    dtx = dt.astype(f32)[..., None] * x.astype(f32)           # (b, L, H, P)
+
+    # chunk-major views (chunk axis FIRST for scan/map)
+    lc = jnp.moveaxis(l.reshape(b, nc, Q, H), 1, 0)           # (nc,b,Q,H)
+    cum = jnp.cumsum(lc, axis=2)
+    total = cum[:, :, -1]                                     # (nc,b,H)
+    dtxc = jnp.moveaxis(dtx.reshape(b, nc, Q, H, Pd), 1, 0)
+    Bc = jnp.moveaxis(B.astype(f32).reshape(b, nc, Q, G, S), 1, 0)
+    Cc = jnp.moveaxis(C.astype(f32).reshape(b, nc, Q, G, S), 1, 0)
+
+    # stage 1 -- per-chunk elements (parallel over chunks):
+    w = jnp.exp(total[:, :, None] - cum)[..., None] * dtxc    # (nc,b,Q,H,P)
+    wg = w.reshape(nc, b, Q, G, rep, Pd)
+    inc = jnp.einsum("nbqgrp,nbqgs->nbgrps", wg, Bc)
+    inc = inc.reshape(nc, b, H, Pd, S)                        # (nc,b,H,P,S)
+
+    # stage 2 -- associative inter-chunk scan (paper eqs. 45-46):
+    def combine(e1, e2):
+        t1, i1 = e1
+        t2, i2 = e2
+        return (t1 + t2, jnp.exp(t2)[..., None, None] * i1 + i2)
+
+    tot_in, inc_in = prefix_scan(combine, (total, inc))
+    # exclusive prefix: state entering chunk c
+    h_prev = jnp.concatenate(
+        [jnp.zeros((1, b, H, Pd, S), f32), inc_in[:-1]], axis=0)
+
+    # stage 3 -- per-chunk outputs, one chunk in flight at a time:
+    ids = jnp.arange(Q)
+    causal = ids[:, None] >= ids[None, :]
+
+    def emit(args):
+        cumc, dtxk, Bk, Ck, hk = args
+        # inter: y_t = exp(cum_t) * C_t . h_prev
+        hg = hk.reshape(b, G, rep, Pd, S)
+        y_inter = jnp.einsum("bqgs,bgrps->bqgrp", Ck, hg)
+        y_inter = y_inter * jnp.exp(cumc).reshape(b, Q, G, rep, 1)
+        # intra: masked decay kernel
+        Gmat = jnp.einsum("bqgs,bkgs->bgqk", Ck, Bk)          # (b,G,Q,Q)
+        dec = jnp.exp(cumc[:, :, None, :] - cumc[:, None, :, :])
+        dec = jnp.where(causal[None, :, :, None], dec, 0.0)   # (b,Q,Q,H)
+        decg = dec.reshape(b, Q, Q, G, rep)
+        M = Gmat.transpose(0, 2, 3, 1)[..., None] * decg      # (b,Q,Q,G,rep)
+        dtxg = dtxk.reshape(b, Q, G, rep, Pd)
+        y_intra = jnp.einsum("bqkgr,bkgrp->bqgrp", M, dtxg)
+        return (y_inter + y_intra).reshape(b, Q, H, Pd)
+
+    ys = jax.lax.map(emit, (cum, dtxc, Bc, Cc, h_prev))       # (nc,b,Q,H,P)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, L, H, Pd)
+    y = y + D.astype(f32)[None, None, :, None] * x.astype(f32)
+    return y[:, :L0].astype(x.dtype)
+
+
+def _project_streams(params, x, cfg: ModelConfig):
+    """in_proj + causal conv + silu -> (z, x, B, C, dt) streams."""
+    din = cfg.ssm_inner
+    gs = cfg.ssm_groups * cfg.ssm_state
+    if cfg.ssm_fused_proj:
+        zxbcdt = jnp.einsum("bld,dk->blk", x, params["w_in"])
+        zxbcdt = logical_constraint(zxbcdt, "batch", None, "ssm_x")
+        z, xs, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+        xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
+        xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+        xbc = jax.nn.silu(xbc)
+        xs, Bm, Cm = jnp.split(xbc, [din, din + gs], axis=-1)
+        return z, xs, Bm, Cm, dt
+    z = jnp.einsum("bld,dk->blk", x, params["w_z"])
+    xs = jnp.einsum("bld,dk->blk", x, params["w_x"])
+    Bm = jnp.einsum("bld,dk->blk", x, params["w_B"])
+    Cm = jnp.einsum("bld,dk->blk", x, params["w_C"])
+    dt = jnp.einsum("bld,dk->blk", x, params["w_dt"])
+    xs = jax.nn.silu(_causal_conv(xs, params["conv_x_w"],
+                                  params["conv_x_b"]))
+    Bm = jax.nn.silu(_causal_conv(Bm, params["conv_B_w"],
+                                  params["conv_B_b"]))
+    Cm = jax.nn.silu(_causal_conv(Cm, params["conv_C_w"],
+                                  params["conv_C_b"]))
+    return z, xs, Bm, Cm, dt
+
+
+def ssm_forward(params, x, cfg: ModelConfig, *, use_kernel: bool = False,
+                interpret: bool = False):
+    """Full-sequence mamba2 block.  x: (B, L, D) -> (B, L, D)."""
+    Bb, L, _ = x.shape
+    z, xs, Bm, Cm, dt = _project_streams(params, x, cfg)
+
+    H, Pd = cfg.ssm_heads, cfg.ssm_head_dim
+    xh = xs.reshape(Bb, L, H, Pd)
+    Bg = Bm.reshape(Bb, L, cfg.ssm_groups, cfg.ssm_state)
+    Cg = Cm.reshape(Bb, L, cfg.ssm_groups, cfg.ssm_state)
+    dth = jax.nn.softplus(dt + params["dt_bias"][None, None])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    if use_kernel:
+        from repro.kernels.ssd import ssd_trainable
+        y = ssd_trainable(xh, dth, A, Bg, Cg, params["D_skip"],
+                          cfg.ssm_chunk, interpret)
+    else:
+        y = ssd_scan_jnp(xh, dth, A, Bg, Cg, params["D_skip"],
+                         cfg.ssm_chunk)
+    y = y.reshape(Bb, L, cfg.ssm_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("blk,kd->bld", y, params["w_out"])
+    return logical_constraint(out, "batch", None, None)
+
+
+def preconv_streams(params, x, cfg: ModelConfig):
+    """in_proj only (no conv/silu): (z, x, B, C, dt), each (B, L, *)."""
+    if cfg.ssm_fused_proj:
+        zxbcdt = jnp.einsum("bld,dk->blk", x, params["w_in"])
+        return _split_proj(cfg, zxbcdt)
+    return (jnp.einsum("bld,dk->blk", x, params["w_z"]),
+            jnp.einsum("bld,dk->blk", x, params["w_x"]),
+            jnp.einsum("bld,dk->blk", x, params["w_B"]),
+            jnp.einsum("bld,dk->blk", x, params["w_C"]),
+            jnp.einsum("bld,dk->blk", x, params["w_dt"]))
+
+
+def conv_cat_weights(params, cfg: ModelConfig):
+    """(K, conv_dim) depthwise kernel over the concatenated (x, B, C)
+    streams (decode-cache layout is stream-concatenated in both modes)."""
+    if cfg.ssm_fused_proj:
+        return params["conv_w"], params["conv_b"]
+    w = jnp.concatenate(
+        [params["conv_x_w"], params["conv_B_w"], params["conv_C_w"]],
+        axis=1)
+    b = jnp.concatenate(
+        [params["conv_x_b"], params["conv_B_b"], params["conv_C_b"]],
+        axis=0)
+    return w, b
+
+
+def ssm_decode(params, x, cfg: ModelConfig, cache: SSMCache):
+    """One-token mamba2 step.  x: (B, 1, D)."""
+    Bb = x.shape[0]
+    z, xs, Bm, Cm, dt = preconv_streams(params, x, cfg)
+    z, xs, Bm, Cm, dt = (a[:, 0] for a in (z, xs, Bm, Cm, dt))
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)      # (B, conv_dim)
+
+    conv_hist = jnp.concatenate([cache.conv, xbc[:, None]], axis=1)
+    w, bconv = conv_cat_weights(params, cfg)           # (K, conv_dim)
+    out = jnp.einsum("bkc,kc->bc", conv_hist, w) + bconv
+    xbc = jax.nn.silu(out)
+    new_conv = conv_hist[:, 1:]
+
+    din = cfg.ssm_inner
+    gs = cfg.ssm_groups * cfg.ssm_state
+    xs, Bm, Cm = jnp.split(xbc, [din, din + gs], axis=-1)
+    H, Pd = cfg.ssm_heads, cfg.ssm_head_dim
+    G, S = cfg.ssm_groups, cfg.ssm_state
+    rep = H // G
+    xh = xs.reshape(Bb, H, Pd).astype(jnp.float32)
+    Bg = Bm.reshape(Bb, G, S).astype(jnp.float32)
+    Cg = Cm.reshape(Bb, G, S).astype(jnp.float32)
+    dth = jax.nn.softplus(dt + params["dt_bias"][None]).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    a = jnp.exp(dth * A[None])                         # (B, H)
+    Bh = jnp.repeat(Bg, rep, axis=1)                   # (B, H, S)
+    Ch = jnp.repeat(Cg, rep, axis=1)
+    state = (a[..., None, None] * cache.state
+             + (dth[..., None] * xh)[..., None] * Bh[:, :, None, :])
+    y = jnp.einsum("bhps,bhs->bhp", state, Ch)
+    y = y + params["D_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(Bb, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y, params["w_out"])[:, None]
+    return out, SSMCache(new_conv, state)
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: (B, L, C); w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(K):
+        out = out + xp[:, k:k + x.shape[1]].astype(jnp.float32) * w[k]
+    return (out + b).astype(x.dtype)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    conv_dim = cfg.ssm_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return SSMCache(
+        jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                  jnp.float32))

@@ -1,0 +1,3 @@
+from . import checkpoint, data, optimizer, trainer
+from .optimizer import AdamWState, adamw_init, adamw_update, cosine_schedule
+from .trainer import Trainer, make_shardings, make_train_step

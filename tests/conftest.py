@@ -1,0 +1,24 @@
+"""Shared test configuration.
+
+float64 is enabled globally: the estimation-theory tests need it, and all
+model code is dtype-explicit (bf16/f32 literals) so it is unaffected.
+NOTE: tests intentionally see the single real CPU device -- only
+launch/dryrun.py forces 512 host platform devices (and only in its own
+process).  Multi-device tests spawn subprocesses.
+"""
+import os
+
+# Keep any ambient dry-run flags out of the test process.
+os.environ.pop("XLA_FLAGS", None)
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

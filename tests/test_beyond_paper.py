@@ -1,0 +1,145 @@
+"""Beyond-paper features: RK4 element integration, perf-knob exactness
+(the optimisation knobs must never change results, only cost)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    grid_lqt_from_linear, parallel_rts, sequential_rts, simulate_linear,
+    time_grid,
+)
+
+from helpers import wiener_velocity
+
+
+def _refine_grid(grid, k: int):
+    """Subdivide every substep into k equal pieces with identical
+    piecewise-constant coefficients/measurements: the SAME continuous
+    problem, integrated k-times finer (a convergence reference)."""
+    from repro.core.types import GridLQT
+
+    def rep(a, scale=1.0):
+        if a is None:
+            return None
+        out = jnp.repeat(a, k, axis=0)
+        return out * scale if scale != 1.0 else out
+
+    return GridLQT(
+        dt=rep(grid.dt, 1.0 / k), F=rep(grid.F), c=rep(grid.c),
+        H=rep(grid.H), r=rep(grid.r), Q=rep(grid.Q), Rinv=rep(grid.Rinv),
+        y=rep(grid.y), S_T=grid.S_T, v_T=grid.v_T,
+        lin=rep(grid.lin))
+
+
+def test_rk4_beats_euler_accuracy():
+    """Against a converged fine-integration reference of the SAME
+    piecewise-constant problem, RK4 elements are far more accurate than
+    the paper's explicit Euler at equal step count.
+
+    (Comparing against ``discrete`` mode would be wrong: that is the
+    exact solution of the Euler-DISCRETISED problem, which RK4 rightly
+    disagrees with.)
+    """
+    model = wiener_velocity()
+    T, n, k = 64, 10, 16
+    ts = time_grid(0.0, 5.0, T * n)
+    _, y = simulate_linear(model, ts, jax.random.PRNGKey(0))
+    grid = grid_lqt_from_linear(model, ts, y)
+    fine = _refine_grid(grid, k)
+    ref = parallel_rts(fine, n * k, "rk4").x[::k]
+    err_eu = float(jnp.max(jnp.abs(parallel_rts(grid, n, "euler").x - ref)))
+    err_rk = float(jnp.max(jnp.abs(parallel_rts(grid, n, "rk4").x - ref)))
+    assert err_rk < err_eu / 3, (err_rk, err_eu)
+
+
+def test_rk4_parallel_more_stable_than_sequential():
+    """A structural finding worth pinning: the parallel decomposition is
+    MORE stable than sequential integration at equal order.  The
+    sequential Riccati RK4 must integrate through the stiff S(tau_f)=1/P0
+    transient (dt*Q*S outside the RK4 stability region at this grid); the
+    parallel path integrates non-stiff BLOCK-LOCAL element ODEs from the
+    identity boundary and handles the stiffness algebraically in the
+    exact combine (42).  Hence parallel-RK4 lands closer to the converged
+    reference than sequential-RK4."""
+    model = wiener_velocity()
+    T, n, k = 64, 10, 16
+    ts = time_grid(0.0, 5.0, T * n)
+    _, y = simulate_linear(model, ts, jax.random.PRNGKey(2))
+    grid = grid_lqt_from_linear(model, ts, y)
+    ref = parallel_rts(_refine_grid(grid, k), n * k, "rk4").x[::k]
+    err_par = float(jnp.max(jnp.abs(parallel_rts(grid, n, "rk4").x - ref)))
+    err_seq = float(jnp.max(jnp.abs(sequential_rts(grid, "rk4").x - ref)))
+    # measured: par-rk4 ~0.09 vs seq-rk4 ~6.6 (70x) -- the sequential
+    # error is dominated by the stiff S(tau_f)=100 transient regardless
+    # of integrator order
+    assert err_par < err_seq / 10, (err_par, err_seq)
+    assert err_par < 0.15, err_par
+
+
+def test_chunked_attention_chunk_invariance():
+    """chunk sizes are a pure cost knob: results identical."""
+    from repro.models.attention import chunked_mha
+    from repro.kernels.flash_attention import mha_ref
+    rng = np.random.default_rng(0)
+    B, Hq, Hkv, L, D = 2, 4, 2, 128, 16
+    q = jnp.asarray(rng.standard_normal((B, Hq, L, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, L, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, L, D)), jnp.float32)
+    want = mha_ref(q, k, v, causal=True)
+    for cq, ck in [(128, 128), (32, 64), (16, 16), (128, 32)]:
+        got = chunked_mha(q, k, v, causal=True, window=None,
+                          chunk_q=cq, chunk_k=ck)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_causal_skip_is_exact():
+    """the triangular schedule changes FLOPs, not results."""
+    from repro.models.attention import chunked_mha
+    rng = np.random.default_rng(1)
+    B, Hq, Hkv, L, D = 1, 4, 4, 96, 8
+    q = jnp.asarray(rng.standard_normal((B, Hq, L, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, L, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, L, D)), jnp.float32)
+    a = chunked_mha(q, k, v, causal=True, window=None, chunk_q=16,
+                    chunk_k=16, causal_skip=False)
+    b = chunked_mha(q, k, v, causal=True, window=None, chunk_q=16,
+                    chunk_k=16, causal_skip=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_ssd_chunk_invariance():
+    """SSD chunk length is a pure cost knob."""
+    from repro.models.ssm import ssd_scan_jnp
+    rng = np.random.default_rng(2)
+    b, L, H, P, S = 2, 96, 4, 16, 8
+    x = jnp.asarray(rng.standard_normal((b, L, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (b, L, H)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.2, 1.5, (H,)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, L, 1, S)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, L, 1, S)), jnp.float32)
+    D = jnp.ones((H,), jnp.float32)
+    ref = ssd_scan_jnp(x, dt, A, B, C, D, chunk=96)
+    for chunk in (8, 16, 32, 48):
+        got = ssd_scan_jnp(x, dt, A, B, C, D, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=3e-4, atol=3e-4)
+
+
+def test_kv_replicate_is_exact():
+    """kv_replicate changes sharding metadata only, never math."""
+    import dataclasses
+    from repro.config import get_config
+    from repro.models import transformer
+    cfg = dataclasses.replace(get_config("qwen3-4b-smoke"),
+                              dtype="float32")
+    cfg_r = dataclasses.replace(cfg, kv_replicate=True)
+    params = transformer.init(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    a = transformer.train_loss(params, batch, cfg)
+    b = transformer.train_loss(params, batch, cfg_r)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-7)

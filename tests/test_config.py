@@ -1,0 +1,73 @@
+"""Config system + shape-suite + sharding-rule tests."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import (
+    SHAPE_SUITE, get_config, list_configs, shape_skip_reason,
+)
+from repro.configs import ARCHS
+from repro.distributed.sharding import choose_pspec, mesh_context
+from repro.models import transformer
+from repro.models.layers import params_axes, params_shapes
+from repro.models.transformer import model_spec
+
+
+def test_registry_has_all_archs():
+    known = list_configs()
+    for a in ARCHS:
+        assert a in known and a + "-smoke" in known
+
+
+def test_shape_suite_cells():
+    assert [s.name for s in SHAPE_SUITE] == [
+        "train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    # skip accounting: exactly 8 documented skips (DESIGN.md S4)
+    skips = [(a, s.name) for a in ARCHS for s in SHAPE_SUITE
+             if shape_skip_reason(get_config(a), s)]
+    assert len(skips) == 8, skips
+    assert ("hubert-xlarge", "decode_32k") in skips
+    assert ("hubert-xlarge", "long_500k") in skips
+    for a in ("smollm-135m", "qwen3-4b", "starcoder2-15b",
+              "llava-next-34b", "phi3.5-moe-42b-a6.6b",
+              "granite-moe-3b-a800m"):
+        assert (a, "long_500k") in skips
+    # SSM / hybrid / SWA archs RUN long_500k
+    for a in ("mamba2-370m", "hymba-1.5b", "h2o-danube-1.8b"):
+        assert (a, "long_500k") not in skips
+
+
+def test_spec_axes_match_param_tree():
+    for a in ARCHS:
+        cfg = get_config(a + "-smoke")
+        spec = model_spec(cfg)
+        axes = params_axes(spec)
+        shapes = params_shapes(spec)
+        params = transformer.init(cfg, jax.random.PRNGKey(0))
+        is_ax = lambda x: isinstance(x, tuple)
+        ax_leaves, ta = jax.tree_util.tree_flatten(axes, is_leaf=is_ax)
+        sh_leaves, _ = jax.tree_util.tree_flatten(shapes, is_leaf=is_ax)
+        p_leaves, tp = jax.tree_util.tree_flatten(params)
+        assert ta == tp, a
+        for ax, shp, p in zip(ax_leaves, sh_leaves, p_leaves):
+            assert tuple(shp) == p.shape, (a, ax, shp, p.shape)
+            assert len(ax) == p.ndim
+
+
+def test_choose_pspec_divisibility_fallback():
+    import os
+    # uses the single real device -> build a fake mesh via abstract mesh
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with mesh_context(mesh):
+        # with model axis size 1 everything divides; spot-check priorities
+        sp = choose_pspec((100, 56, 128), ("embed", "heads", "head"))
+        assert sp == P(None, "model", None)
+    # llava-like fallback logic is exercised in the dry-run (16-way axis)
+
+
+def test_param_counts_active_vs_total():
+    phi = get_config("phi3.5-moe-42b-a6.6b")
+    assert phi.active_param_count() < phi.param_count() * 0.3
+    dense = get_config("qwen3-4b")
+    assert dense.active_param_count() == dense.param_count()

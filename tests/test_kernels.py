@@ -1,0 +1,161 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import LQTElement
+from repro.kernels.flash_attention import attention, attention_trainable, mha_ref
+from repro.kernels.lqt_combine import lqt_combine_batched, lqt_combine_ref, scan_combine_fn
+from repro.kernels.ssd import ssd, ssd_ref, ssd_trainable
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# lqt_combine
+# ---------------------------------------------------------------------------
+
+def _rand_elems(rng, B, nx, dtype):
+    def psd():
+        A = rng.standard_normal((B, nx, nx))
+        return jnp.asarray(np.einsum("bij,bkj->bik", A, A) / nx
+                           + 0.1 * np.eye(nx), dtype)
+
+    return LQTElement(
+        jnp.asarray(rng.standard_normal((B, nx, nx)) * 0.6, dtype),
+        jnp.asarray(rng.standard_normal((B, nx)), dtype),
+        psd(),
+        jnp.asarray(rng.standard_normal((B, nx)), dtype),
+        psd())
+
+
+@pytest.mark.parametrize("nx", [2, 4, 5, 8])
+@pytest.mark.parametrize("B,dtype", [
+    (8, jnp.float32), (64, jnp.float32), (130, jnp.float64),
+])
+def test_lqt_combine_kernel_matches_ref(nx, B, dtype):
+    rng = np.random.default_rng(nx * 1000 + B)
+    e1 = _rand_elems(rng, B, nx, dtype)
+    e2 = _rand_elems(rng, B, nx, dtype)
+    got = lqt_combine_batched(e1, e2, interpret=True)
+    want = lqt_combine_ref(*e1, *e2)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float64),
+                                   np.asarray(w, np.float64),
+                                   rtol=5e-5, atol=5e-5)
+
+
+def test_kernel_backed_scan_matches_core_scan():
+    """the kernel combine drops into pscan and reproduces the filter scan."""
+    from repro.core import prefix_scan, lqt_combine as core_combine
+    rng = np.random.default_rng(0)
+    elems = _rand_elems(rng, 32, 4, jnp.float64)
+    want = prefix_scan(core_combine, elems)
+    got = prefix_scan(scan_combine_fn(interpret=True, block_b=8), elems)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-8, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# ssd
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [
+    # b, L, H, P, G, S, chunk
+    (2, 64, 4, 16, 1, 8, 16),
+    (1, 48, 6, 32, 2, 16, 16),
+    (2, 33, 2, 8, 1, 4, 8),       # unaligned L -> padding path
+    (1, 128, 2, 64, 1, 64, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_matches_ref(shape, dtype):
+    b, L, H, P, G, S, chunk = shape
+    rng = np.random.default_rng(L + H)
+    x = jnp.asarray(rng.standard_normal((b, L, H, P)), dtype)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (b, L, H)), dtype)
+    A = jnp.asarray(-rng.uniform(0.2, 1.5, (H,)), dtype)
+    B = jnp.asarray(rng.standard_normal((b, L, G, S)), dtype)
+    C = jnp.asarray(rng.standard_normal((b, L, G, S)), dtype)
+    D = jnp.asarray(rng.standard_normal((H,)), dtype)
+    got = ssd(x, dt, A, B, C, D, chunk=chunk, interpret=True)
+    if dtype == jnp.bfloat16:
+        # bf16: kernel accumulates f32 and rounds once, the bf16 ref rounds
+        # per step -- judge both against the f32 oracle with an absolute
+        # tolerance scaled to bf16 resolution at the output magnitude.
+        f32 = jnp.float32
+        want = ssd_ref(x.astype(f32), dt.astype(f32), A.astype(f32),
+                       B.astype(f32), C.astype(f32), D.astype(f32))
+        scale = float(jnp.abs(want).max())
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=0.04 * scale)
+    else:
+        want = ssd_ref(x, dt, A, B, C, D)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **_tol(dtype))
+
+
+def test_ssd_trainable_grads_finite():
+    rng = np.random.default_rng(1)
+    b, L, H, P, G, S = 1, 32, 2, 8, 1, 4
+    x = jnp.asarray(rng.standard_normal((b, L, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (b, L, H)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.2, 1.5, (H,)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, L, G, S)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, L, G, S)), jnp.float32)
+    D = jnp.asarray(rng.standard_normal((H,)), jnp.float32)
+
+    def loss(*args):
+        return jnp.sum(ssd_trainable(*args, 16, True) ** 2)
+
+    grads = jax.grad(loss, argnums=(0, 1, 2, 3, 4, 5))(x, dt, A, B, C, D)
+    for g in grads:
+        assert bool(jnp.isfinite(g).all())
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", [
+    # B, Hq, Hkv, Lq, Lk, D, causal, window, bq, bk
+    (2, 4, 2, 64, 64, 16, True, None, 16, 16),
+    (1, 6, 2, 32, 32, 32, True, 24, 16, 16),
+    (2, 4, 4, 16, 64, 16, True, None, 16, 16),    # decode: Lq < Lk
+    (1, 2, 1, 64, 64, 8, False, None, 32, 16),
+    (1, 8, 1, 128, 128, 16, True, 32, 32, 32),    # MQA + SWA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    B, Hq, Hkv, Lq, Lk, D, causal, window, bq, bk = case
+    rng = np.random.default_rng(Lq + D)
+    q = jnp.asarray(rng.standard_normal((B, Hq, Lq, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, Lk, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, Lk, D)), dtype)
+    got = attention(q, k, v, causal=causal, window=window,
+                    block_q=bq, block_k=bk, interpret=True)
+    want = mha_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_grads_finite():
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((1, 4, 32, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 32, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 32, 16)), jnp.float32)
+
+    def loss(q, k, v):
+        return jnp.sum(attention_trainable(q, k, v, True, None, True) ** 2)
+
+    gq, gk, gv = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    assert all(bool(jnp.isfinite(g).all()) for g in (gq, gk, gv))
+    # and the fwd value matches the ref the bwd is derived from
+    np.testing.assert_allclose(
+        attention_trainable(q, k, v, True, None, True),
+        mha_ref(q, k, v, causal=True), rtol=2e-5, atol=2e-5)

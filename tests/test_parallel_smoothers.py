@@ -1,0 +1,168 @@
+"""Accuracy parity: parallel vs sequential vs dense-QP oracle.
+
+This is the paper's core correctness claim ("maintaining the accuracy of
+sequential algorithms", section 5): every parallel method must agree with
+its sequential counterpart, and the ``discrete`` element mode must solve the
+Euler-discretised problem exactly (QP oracle match).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    grid_lqt_from_linear, map_estimate, om_cost_linear,
+    parallel_backward, parallel_rts, parallel_two_filter,
+    qp_map_from_grid, sequential_backward, sequential_rts,
+    sequential_two_filter, simulate_linear, time_grid,
+)
+
+from helpers import random_ltv, wiener_velocity
+
+
+@pytest.fixture(scope="module")
+def wiener_problem():
+    model = wiener_velocity()
+    T, n = 256, 10
+    ts = time_grid(0.0, 5.0, T * n)
+    xs, y = simulate_linear(model, ts, jax.random.PRNGKey(0))
+    grid = grid_lqt_from_linear(model, ts, y)
+    return model, ts, xs, y, grid, n
+
+
+@pytest.fixture(scope="module")
+def ltv_problem():
+    model = random_ltv(jax.random.PRNGKey(7))
+    T, n = 64, 5
+    ts = time_grid(0.0, 4.0, T * n)
+    xs, y = simulate_linear(model, ts, jax.random.PRNGKey(1))
+    grid = grid_lqt_from_linear(model, ts, y)
+    return model, ts, xs, y, grid, n
+
+
+def test_discrete_parallel_equals_sequential_exactly(wiener_problem):
+    _, _, _, _, grid, n = wiener_problem
+    seq = sequential_rts(grid, "discrete")
+    par = parallel_rts(grid, n, "discrete")
+    np.testing.assert_allclose(par.x, seq.x, rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(par.S, seq.S, rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(par.v, seq.v, rtol=1e-9, atol=1e-9)
+
+
+def test_discrete_matches_qp_oracle(ltv_problem):
+    _, _, _, _, grid, n = ltv_problem
+    x_qp = qp_map_from_grid(grid)
+    par = parallel_rts(grid, n, "discrete")
+    np.testing.assert_allclose(par.x, x_qp, rtol=1e-6, atol=1e-7)
+    tf = parallel_two_filter(grid, n, "discrete")
+    np.testing.assert_allclose(tf.x, x_qp, rtol=1e-6, atol=1e-7)
+
+
+def test_euler_parallel_tracks_sequential(wiener_problem):
+    """euler mode: parallel and sequential agree to the discretisation
+    order (they are different O(dt^2)-local approximations)."""
+    _, _, _, _, grid, n = wiener_problem
+    seq = sequential_rts(grid, "euler")
+    par = parallel_rts(grid, n, "euler")
+    assert float(jnp.max(jnp.abs(par.x - seq.x))) < 5e-2
+    ref = parallel_rts(grid, n, "discrete")
+    assert float(jnp.max(jnp.abs(par.x - ref.x))) < 5e-2
+
+
+def test_euler_convergence_rate(wiener_problem):
+    """halving dt must shrink the euler-vs-exact gap ~linearly or better."""
+    model, _, _, _, _, _ = wiener_problem
+    errs = []
+    for T in (256, 512, 1024):
+        n = 10
+        ts = time_grid(0.0, 5.0, T * n)
+        _, y = simulate_linear(model, ts, jax.random.PRNGKey(3))
+        grid = grid_lqt_from_linear(model, ts, y)
+        eu = parallel_rts(grid, n, "euler")
+        ex = parallel_rts(grid, n, "discrete")
+        errs.append(float(jnp.max(jnp.abs(eu.x - ex.x))))
+    assert errs[2] < errs[1] < errs[0]
+    assert errs[0] / errs[2] > 3.0, errs
+
+
+def test_two_filter_equals_rts(wiener_problem):
+    """eq. (39)/(48) two-filter recovery == eq. (47) forward recovery.
+
+    In ``discrete`` mode both recoveries solve the same quadratic problem
+    exactly -> tight tolerance; in ``euler`` mode they are two different
+    O(dt^2)-local discretisations -> agreement only to the discretisation
+    error scale (same magnitude as parallel-vs-sequential euler gaps).
+    """
+    _, _, _, _, grid, n = wiener_problem
+    for mode, atol in (("euler", 5e-2), ("discrete", 1e-5)):
+        rts = parallel_rts(grid, n, mode)
+        tf = parallel_two_filter(grid, n, mode)
+        np.testing.assert_allclose(tf.x, rts.x, atol=atol)
+        tf_mi = parallel_two_filter(grid, n, mode,
+                                    block0_fill="min_initial")
+        np.testing.assert_allclose(tf_mi.x, rts.x, atol=max(atol, 2e-4))
+
+
+def test_two_filter_sequential_parity(wiener_problem):
+    _, _, _, _, grid, n = wiener_problem
+    seq = sequential_two_filter(grid, "discrete")
+    par = parallel_two_filter(grid, n, "discrete",
+                              block0_fill="min_initial")
+    np.testing.assert_allclose(par.x, seq.x, rtol=1e-7, atol=1e-7)
+
+
+def test_backward_is_kalman_bucy_information_filter(ltv_problem):
+    """S, v from the parallel scan == sequential information recursion,
+    i.e. the parallel Kalman-Bucy filter (paper sections 2.5, 4)."""
+    _, _, _, _, grid, n = ltv_problem
+    seq = sequential_backward(grid, "discrete")
+    par, _, _, _ = parallel_backward(grid, n, "discrete")
+    np.testing.assert_allclose(par.S, seq.S, rtol=1e-8, atol=1e-9)
+    np.testing.assert_allclose(par.v, seq.v, rtol=1e-8, atol=1e-9)
+
+
+def test_map_cost_optimality(ltv_problem):
+    """the MAP estimate must beat perturbed trajectories in OM cost."""
+    model, ts, _, y, grid, n = ltv_problem
+    sol = parallel_rts(grid, n, "discrete")
+    c_star = float(om_cost_linear(model, ts, y, sol.x))
+    key = jax.random.PRNGKey(11)
+    for k in jax.random.split(key, 4):
+        pert = sol.x + 1e-2 * jax.random.normal(k, sol.x.shape)
+        assert float(om_cost_linear(model, ts, y, pert)) > c_star
+
+
+def test_smoothing_covariance_psd(wiener_problem):
+    _, _, _, _, grid, n = wiener_problem
+    tf = parallel_two_filter(grid, n, "discrete")
+    cov = np.asarray(tf.cov)
+    finite = np.isfinite(cov).all(axis=(1, 2))
+    assert finite.sum() >= cov.shape[0] - (n - 1)  # block-0 interior NaN ok
+    w = np.linalg.eigvalsh(cov[finite])
+    assert w.min() > -1e-9
+
+
+def test_batched_vmap_solvers(ltv_problem):
+    """whole solver vmaps over a batch of measurement records."""
+    model, ts, _, _, _, n = ltv_problem
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    ys = jnp.stack([simulate_linear(model, ts, k)[1] for k in keys])
+
+    def solve(y):
+        return parallel_rts(grid_lqt_from_linear(model, ts, y), n,
+                            "discrete").x
+
+    batched = jax.vmap(solve)(ys)
+    for i in range(3):
+        np.testing.assert_allclose(batched[i], solve(ys[i]),
+                                   rtol=1e-9, atol=1e-9)
+
+
+def test_map_estimate_api(wiener_problem):
+    model, ts, _, y, _, n = wiener_problem
+    for method in ("parallel_rts", "parallel_two_filter",
+                   "sequential_rts", "sequential_two_filter"):
+        sol = map_estimate(model, ts, y, method=method, nsub=n,
+                           mode="discrete")
+        assert sol.x.shape == (len(ts), 4)
+        assert bool(jnp.isfinite(sol.x).all())

@@ -1,0 +1,68 @@
+"""Request-axis throughput: problems/sec vs batch size.
+
+The paper's axis is time (span log T per problem); production serving also
+exploits the REQUEST axis -- many independent estimation problems solved as
+one compiled, batched program (``repro.core.batching``).  This benchmark
+reports problems/sec for sequential vs parallel methods across batch
+sizes: on accelerators the parallel method keeps per-problem latency flat
+while batching multiplies throughput until the device saturates.
+
+    PYTHONPATH=src python benchmarks/batch_throughput.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import jax
+import jax.numpy as jnp
+
+
+def run(batch_sizes=(1, 8, 32), T=64, nsub=10, mode="discrete",
+        methods=("sequential_rts", "parallel_rts"), repeats=3, smoke=False):
+    from repro.configs.wiener_velocity import WienerVelocityConfig
+    from repro.core import map_estimate_batched, simulate_linear, time_grid
+
+    if smoke:
+        T, repeats = 8, 1
+
+    wcfg = WienerVelocityConfig(p0=1.0)
+    model = wcfg.model()
+    N = T * nsub
+    ts = time_grid(wcfg.t0, wcfg.tf, N, dtype=jnp.float32)
+    _, y = simulate_linear(model, ts, jax.random.PRNGKey(0))
+
+    rows = []
+    for method in methods:
+        for B in batch_sizes:
+            ys = jnp.broadcast_to(y, (B,) + y.shape)
+            solve = lambda: map_estimate_batched(
+                model, ts, ys, method=method, nsub=nsub, mode=mode)
+            solve().x.block_until_ready()          # compile + warmup
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                solve().x.block_until_ready()
+            dt = (time.perf_counter() - t0) / repeats
+            rows.append({
+                "name": f"batch/{method}/B{B}_T{T}",
+                "us_per_call": dt * 1e6,
+                "derived": f"problems_per_sec={B / dt:.1f}",
+            })
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny problem sizes (CI bit-rot check)")
+    args = ap.parse_args()
+    for r in run(smoke=args.smoke):
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,14 +25,14 @@ def _time(fn, *args, repeats=5):
     return (time.perf_counter() - t0) / repeats * 1e6
 
 
-def run():
+def run(smoke=False):
     rows = []
     rng = np.random.default_rng(0)
 
     # lqt_combine: batched eq. (42)
     from repro.core.types import LQTElement
     from repro.core.combine import lqt_combine
-    for B, nx in [(1024, 4), (4096, 4), (1024, 8)]:
+    for B, nx in [(64, 4)] if smoke else [(1024, 4), (4096, 4), (1024, 8)]:
         def psd():
             A = rng.standard_normal((B, nx, nx))
             return jnp.asarray(
@@ -53,7 +53,8 @@ def run():
 
     # ssd chunked scan (jnp path; == kernel algorithm)
     from repro.models.ssm import ssd_scan_jnp
-    for (b, L, H, P, S, Q) in [(2, 2048, 8, 64, 64, 128)]:
+    for (b, L, H, P, S, Q) in ([(1, 256, 4, 16, 16, 64)] if smoke
+                               else [(2, 2048, 8, 64, 64, 128)]):
         x = jnp.asarray(rng.standard_normal((b, L, H, P)), jnp.float32)
         dt = jnp.asarray(rng.uniform(0.01, 0.1, (b, L, H)), jnp.float32)
         A = -jnp.asarray(rng.uniform(0.5, 1.0, (H,)), jnp.float32)
@@ -71,7 +72,8 @@ def run():
 
     # chunked attention (ref path of the flash kernel)
     from repro.models.attention import chunked_mha
-    for (b, Hq, Hkv, L, D, ck) in [(1, 8, 2, 2048, 64, 256)]:
+    for (b, Hq, Hkv, L, D, ck) in ([(1, 2, 1, 256, 32, 128)] if smoke
+                                   else [(1, 8, 2, 2048, 64, 256)]):
         q = jnp.asarray(rng.standard_normal((b, Hq, L, D)), jnp.float32)
         k = jnp.asarray(rng.standard_normal((b, Hkv, L, D)), jnp.float32)
         v = jnp.asarray(rng.standard_normal((b, Hkv, L, D)), jnp.float32)

@@ -5,9 +5,12 @@ Prints ``name,us_per_call,derived`` CSV lines.
   fig1/*    paper Fig. 1  (linear Wiener velocity, seq vs parallel)
   fig2/*    paper Fig. 2  (coordinated-turn iterated MAP)
   kern/*    kernel micro-benchmarks
+  batch/*   request-axis throughput (problems/sec vs batch size)
   scan/*    distributed-scan span scaling (single-process proxy)
 
-``--fast`` shrinks the sweeps (CI-sized); default runs the full grids.
+``--fast`` shrinks the sweeps (CI-sized); ``--smoke`` shrinks further to
+bit-rot-check sizes (every section runs in seconds); default runs the full
+grids.
 """
 from __future__ import annotations
 
@@ -21,23 +24,36 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes: CI bit-rot check for every section")
     ap.add_argument("--only", default="",
-                    help="comma list: fig1,fig2,kern")
+                    help="comma list: fig1,fig2,kern,batch")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     rows = []
-    from benchmarks import fig1_linear, fig2_nonlinear, kernels_bench
+    from benchmarks import (
+        batch_throughput, fig1_linear, fig2_nonlinear, kernels_bench,
+    )
     if only is None or "fig1" in only:
-        rows += fig1_linear.run(
-            T_list=(128, 256) if args.fast else (128, 256, 512, 1024, 2048),
-            repeats=3 if args.fast else 5)
+        if args.smoke:
+            rows += fig1_linear.run(T_list=(16,), repeats=1)
+        else:
+            rows += fig1_linear.run(
+                T_list=(128, 256) if args.fast
+                else (128, 256, 512, 1024, 2048),
+                repeats=3 if args.fast else 5)
     if only is None or "fig2" in only:
-        rows += fig2_nonlinear.run(
-            T_list=(64, 128) if args.fast else (64, 128, 256, 512),
-            repeats=2 if args.fast else 5)
+        if args.smoke:
+            rows += fig2_nonlinear.run(T_list=(16,), repeats=1, iterations=2)
+        else:
+            rows += fig2_nonlinear.run(
+                T_list=(64, 128) if args.fast else (64, 128, 256, 512),
+                repeats=2 if args.fast else 5)
     if only is None or "kern" in only:
-        rows += kernels_bench.run()
+        rows += kernels_bench.run(smoke=args.smoke)
+    if only is None or "batch" in only:
+        rows += batch_throughput.run(smoke=args.smoke or args.fast)
 
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

@@ -27,9 +27,8 @@ from repro.core import (
     distributed_scan, grid_lqt_from_linear, lqt_combine, simulate_linear,
     suffix_scan, time_grid,
 )
-from repro.core.combine import value_as_element
 from repro.core.elements import discrete_block_elements, terminal_element
-from repro.core.types import LQTElement, ValueFn
+from repro.core.types import LQTElement
 
 cfg = WienerVelocityConfig(p0=1.0)
 model = cfg.model()

@@ -7,6 +7,15 @@ and two-filter smoothing, and iterated linearisation for nonlinear models,
 all built on associative scans.
 """
 from .api import map_estimate, METHODS
+from .batching import (
+    bucket_length,
+    cache_stats,
+    clear_cache,
+    map_estimate_batched,
+    map_estimate_ragged,
+    pad_record,
+    slice_solution,
+)
 from .combine import (
     affine_combine,
     apply_element_to_value,
@@ -16,6 +25,7 @@ from .combine import (
 )
 from .nonlinear import iterated_map
 from .oracle import qp_map_estimate, qp_map_from_grid
+from .registry import get_solver, method_names, register_method
 from .parallel import parallel_backward, parallel_rts, parallel_two_filter
 from .pscan import distributed_scan, prefix_scan, suffix_scan
 from .sde import (
@@ -47,6 +57,10 @@ __all__ = [
     "AffineElement", "GridLQT", "LQTElement", "MAPSolution", "ValueFn",
     "LinearSDE", "NonlinearSDE", "METHODS",
     "map_estimate", "iterated_map",
+    "map_estimate_batched", "map_estimate_ragged",
+    "bucket_length", "pad_record", "slice_solution",
+    "cache_stats", "clear_cache",
+    "get_solver", "method_names", "register_method",
     "parallel_backward", "parallel_rts", "parallel_two_filter",
     "sequential_backward", "sequential_rts", "sequential_two_filter",
     "prefix_scan", "suffix_scan", "distributed_scan",

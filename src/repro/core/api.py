@@ -6,25 +6,31 @@
 ``model`` is a :class:`~repro.core.sde.LinearSDE` or
 :class:`~repro.core.sde.NonlinearSDE`; nonlinear models are solved with the
 iterated linearisation of section 4.4.  All solvers are jit-friendly pure
-functions; batches of measurement records can be handled with ``jax.vmap``
-(see examples/).
+functions; batches of measurement records are handled by
+:func:`~repro.core.batching.map_estimate_batched` (stacked records) and
+:func:`~repro.core.batching.map_estimate_ragged` (pad-and-bucket for
+ragged record lengths).
+
+``measurement_mask`` zeroes the information contribution of selected
+measurement intervals (mask 0.0) while keeping the dynamics prior intact;
+it is what makes length-padding exact (a padded tail beyond ``t_f`` with
+no measurements adds zero Onsager-Machlup cost and leaves the MAP estimate
+on the real window unchanged), and it doubles as a missing-data mask.
 """
 from __future__ import annotations
 
-from typing import Union
+from typing import Optional, Union
 
 import jax.numpy as jnp
 
 from .nonlinear import iterated_map
-from .parallel import parallel_rts, parallel_two_filter
+from .registry import get_solver, method_names
 from .sde import LinearSDE, NonlinearSDE, grid_lqt_from_linear
-from .sequential import sequential_rts, sequential_two_filter
-from .types import MAPSolution
 
-METHODS = (
-    "parallel_rts", "parallel_two_filter",
-    "sequential_rts", "sequential_two_filter",
-)
+# Static snapshot of the BUILT-IN methods (back-compat export).  Methods
+# added later via ``registry.register_method`` appear in ``method_names()``
+# (the live view), not here.
+METHODS = method_names()
 
 
 def map_estimate(
@@ -37,20 +43,16 @@ def map_estimate(
     mode: str = "euler",
     iterations: int = 5,
     divergence_correction: bool = False,
-) -> MAPSolution:
-    if method not in METHODS:
-        raise ValueError(f"method must be one of {METHODS}, got {method!r}")
+    measurement_mask: Optional[jnp.ndarray] = None,
+):
+    solver = get_solver(method)
 
     if isinstance(model, NonlinearSDE):
         return iterated_map(
             model, ts, y, iterations=iterations, method=method, nsub=nsub,
-            mode=mode, divergence_correction=divergence_correction)
+            mode=mode, divergence_correction=divergence_correction,
+            measurement_mask=measurement_mask)
 
-    grid = grid_lqt_from_linear(model, ts, y)
-    if method == "parallel_rts":
-        return parallel_rts(grid, nsub, mode)
-    if method == "parallel_two_filter":
-        return parallel_two_filter(grid, nsub, mode)
-    if method == "sequential_rts":
-        return sequential_rts(grid, mode)
-    return sequential_two_filter(grid, mode)
+    grid = grid_lqt_from_linear(model, ts, y,
+                                measurement_mask=measurement_mask)
+    return solver(grid, nsub, mode)

@@ -14,27 +14,14 @@ term in as an extra linear running cost (DESIGN.md S1).
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from .parallel import parallel_rts, parallel_two_filter
+from .registry import get_solver
 from .sde import NonlinearSDE, grid_lqt_from_nonlinear
-from .sequential import sequential_rts, sequential_two_filter
 from .types import MAPSolution
-
-
-def _solve(grid, method: str, nsub: int, mode: str) -> MAPSolution:
-    if method == "parallel_rts":
-        return parallel_rts(grid, nsub, mode)
-    if method == "parallel_two_filter":
-        return parallel_two_filter(grid, nsub, mode)
-    if method == "sequential_rts":
-        return sequential_rts(grid, mode)
-    if method == "sequential_two_filter":
-        return sequential_two_filter(grid, mode)
-    raise ValueError(f"unknown method: {method}")
 
 
 def iterated_map(
@@ -48,21 +35,31 @@ def iterated_map(
     mode: str = "euler",
     divergence_correction: bool = False,
     x_init: jnp.ndarray | None = None,
+    measurement_mask: Optional[jnp.ndarray] = None,
 ) -> MAPSolution:
-    """Continuous-time iterated MAP estimation (paper section 4.4/5.2).
+    """Continuous-time iterated MAP estimation (paper section 5.2).
 
     ``iterations`` fixed Gauss-Newton style passes (paper uses 5); the
     initial nominal trajectory defaults to the constant prior mean.
-    Returns the MAP solution from the final linearisation.
+    ``x_init`` may be a full nominal trajectory ``(N+1, nx)`` or a single
+    state ``(nx,)`` that is broadcast along time -- the latter is the
+    batch-friendly form (a per-record warm-start point vmaps over records
+    of any padded length).  ``measurement_mask`` (``(N,)`` of 0/1) zeroes
+    masked measurement intervals in every linearisation pass (padding /
+    missing data).  Returns the MAP solution from the final linearisation.
     """
+    solver = get_solver(method)
     N = y.shape[0]
     if x_init is None:
         x_init = jnp.broadcast_to(model.m0, (N + 1,) + model.m0.shape)
+    elif x_init.ndim == 1:
+        x_init = jnp.broadcast_to(x_init, (N + 1,) + x_init.shape)
 
     def body(xbar, _):
         grid = grid_lqt_from_nonlinear(
-            model, ts, y, xbar, divergence_correction=divergence_correction)
-        sol = _solve(grid, method, nsub, mode)
+            model, ts, y, xbar, divergence_correction=divergence_correction,
+            measurement_mask=measurement_mask)
+        sol = solver(grid, nsub, mode)
         return sol.x, None
 
     # iterations-1 passes inside lax.scan (keeps the compiled graph O(1) in
@@ -70,5 +67,6 @@ def iterated_map(
     # ``iterations`` linearise+solve passes total, matching the paper.
     x_last, _ = jax.lax.scan(body, x_init, None, length=iterations - 1)
     grid = grid_lqt_from_nonlinear(
-        model, ts, y, x_last, divergence_correction=divergence_correction)
-    return _solve(grid, method, nsub, mode)
+        model, ts, y, x_last, divergence_correction=divergence_correction,
+        measurement_mask=measurement_mask)
+    return solver(grid, nsub, mode)

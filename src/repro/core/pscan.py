@@ -21,7 +21,6 @@ temporal decomposition described in DESIGN.md S3.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, TypeVar
 
 import jax

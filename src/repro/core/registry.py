@@ -1,0 +1,58 @@
+"""Method registry: one dispatch table for every MAP solver backend.
+
+``api.map_estimate`` and ``nonlinear.iterated_map`` used to carry parallel
+if-chains over method names; both now dispatch through this table, and new
+backends (e.g. a kernel-backed combine, a distributed-scan variant) plug in
+with :func:`register_method` without touching the call sites.
+
+Every solver is normalised to the uniform signature
+
+    solver(grid: GridLQT, nsub: int, mode: str) -> MAPSolution
+
+(sequential methods simply ignore ``nsub``).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+from .parallel import parallel_rts, parallel_two_filter
+from .sequential import sequential_rts, sequential_two_filter
+from .types import GridLQT, MAPSolution
+
+Solver = Callable[[GridLQT, int, str], MAPSolution]
+
+_SOLVERS: Dict[str, Solver] = {}
+
+
+def register_method(name: str, solver: Solver, *, overwrite: bool = False) -> None:
+    """Register a solver backend under ``name``.
+
+    ``solver`` must accept ``(grid, nsub, mode)`` and return a
+    :class:`~repro.core.types.MAPSolution`.
+    """
+    if name in _SOLVERS and not overwrite:
+        raise ValueError(f"method {name!r} already registered")
+    _SOLVERS[name] = solver
+
+
+def get_solver(name: str) -> Solver:
+    try:
+        return _SOLVERS[name]
+    except KeyError:
+        raise ValueError(
+            f"method must be one of {method_names()}, got {name!r}"
+        ) from None
+
+
+def method_names() -> Tuple[str, ...]:
+    return tuple(_SOLVERS)
+
+
+# parallel solvers already have the registry signature; the sequential
+# ones take no nsub and need the dropping adapter.
+register_method("parallel_rts", parallel_rts)
+register_method("parallel_two_filter", parallel_two_filter)
+register_method("sequential_rts",
+                lambda grid, nsub, mode: sequential_rts(grid, mode))
+register_method("sequential_two_filter",
+                lambda grid, nsub, mode: sequential_two_filter(grid, mode))

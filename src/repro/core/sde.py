@@ -135,14 +135,27 @@ def build_grid_lqt(
     F: Array, c: Array, H: Array, r: Array, Q: Array, R: Array,
     y: Array, dt: Array, m0: Array, P0: Array,
     lin: Optional[Array] = None,
+    measurement_mask: Optional[Array] = None,
 ) -> GridLQT:
     """Time-reverse grid coefficients into the LQT problem of section 2.4.
 
     Reversed interval ``j`` <- original interval ``N-1-j``;
     ``F~ = -F``, ``c~ = -c`` (section 2.2 definitions).
+
+    ``measurement_mask`` (``(N,)``, original time order, 1.0 = real) zeroes
+    ``R^{-1}`` (and the optional linear cost) on masked intervals, removing
+    their measurement information while keeping the dynamics prior.  A
+    masked tail beyond the last real measurement contributes zero cost at
+    the optimum (the extension just follows the drift), so the MAP estimate
+    at real points is unchanged -- the basis of exact length-padding in
+    :mod:`repro.core.batching`.
     """
     flip = lambda a: jnp.flip(a, axis=0)
     Rinv = jnp.linalg.inv(R)
+    if measurement_mask is not None:
+        Rinv = Rinv * measurement_mask[:, None, None]
+        if lin is not None:
+            lin = lin * measurement_mask[:, None]
     S_T = jnp.linalg.inv(P0)
     v_T = S_T @ m0
     return GridLQT(
@@ -155,15 +168,20 @@ def build_grid_lqt(
     )
 
 
-def grid_lqt_from_linear(model: LinearSDE, ts: Array, y: Array) -> GridLQT:
+def grid_lqt_from_linear(
+    model: LinearSDE, ts: Array, y: Array,
+    measurement_mask: Optional[Array] = None,
+) -> GridLQT:
     F, c, H, r, Q, R = model.grids(ts)
     dt = jnp.diff(ts)
-    return build_grid_lqt(F, c, H, r, Q, R, y, dt, model.m0, model.P0)
+    return build_grid_lqt(F, c, H, r, Q, R, y, dt, model.m0, model.P0,
+                          measurement_mask=measurement_mask)
 
 
 def grid_lqt_from_nonlinear(
     model: NonlinearSDE, ts: Array, y: Array, xbar: Array,
     divergence_correction: bool = False,
+    measurement_mask: Optional[Array] = None,
 ) -> GridLQT:
     F, c, H, r = model.linearise(xbar, ts)
     tl = ts[:-1]
@@ -175,7 +193,8 @@ def grid_lqt_from_nonlinear(
         # Onsager-Machlup adds +1/2 int div f dt; linearised about xbar the
         # phi-dependent part is  1/2 g(xbar)^T phi with g = grad div f.
         lin = 0.5 * model.divergence_gradient(xbar, ts)
-    return build_grid_lqt(F, c, H, r, Q, R, y, dt, model.m0, model.P0, lin=lin)
+    return build_grid_lqt(F, c, H, r, Q, R, y, dt, model.m0, model.P0,
+                          lin=lin, measurement_mask=measurement_mask)
 
 
 # ---------------------------------------------------------------------------

@@ -13,7 +13,6 @@ equivalence test against uncompressed training.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Tuple
 
 import jax

@@ -188,3 +188,24 @@ def tree_shardings(axes_tree, shapes_tree, mesh: Optional[Mesh] = None):
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), specs,
         is_leaf=lambda x: isinstance(x, P))
+
+
+def shard_over_batch(fn, mesh: Mesh, batch_axis: str,
+                     arg_batched: Sequence[bool]):
+    """Wrap a batched function so its leading batch axis spreads over
+    ``mesh.shape[batch_axis]`` devices with ``shard_map``.
+
+    ``arg_batched[i]`` marks whether positional arg ``i`` carries the batch
+    axis (sharded) or is shared across requests (replicated).  Outputs are
+    sharded over the batch axis.  This is the REQUEST-axis decomposition
+    used by ``repro.core.batching`` / the ``TrajectoryEngine`` -- the
+    complement of the time-axis ``core.pscan.distributed_scan``.
+    """
+    try:                                   # jax >= 0.6 top-level API
+        from jax import shard_map
+    except ImportError:                    # older releases
+        from jax.experimental.shard_map import shard_map
+
+    in_specs = tuple(P(batch_axis) if b else P() for b in arg_batched)
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=P(batch_axis))

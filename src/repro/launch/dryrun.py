@@ -28,7 +28,6 @@ import time          # noqa: E402
 import traceback     # noqa: E402
 
 import jax           # noqa: E402
-import numpy as np   # noqa: E402
 
 
 _DTYPE_BYTES = {
@@ -155,7 +154,6 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         choose_pspec, mesh_context, tree_shardings)
     from repro.launch.mesh import make_production_mesh
     from repro.launch.steps import cache_pspecs, make_step
-    from repro.models import transformer
     from repro.train.trainer import make_shardings
     from jax.sharding import NamedSharding, PartitionSpec as P
 

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig, ShapeConfig, TrainConfig
 from repro.models import transformer
-from repro.train.optimizer import AdamWState, adamw_init
+from repro.train.optimizer import adamw_init
 from repro.train.trainer import make_train_step
 
 

@@ -10,7 +10,6 @@ from ``repro.distributed.sharding`` (see train/trainer.py).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 

@@ -16,7 +16,6 @@ GQA is computed WITHOUT repeating K/V: q is reshaped to
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax

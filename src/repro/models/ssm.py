@@ -14,7 +14,7 @@ depthwise conv on (x,B,C), SSD scan, gated RMSNorm, out_proj.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -1,1 +1,4 @@
 from .engine import Request, ServeEngine
+from .trajectory import TrajectoryEngine
+
+__all__ = ["Request", "ServeEngine", "TrajectoryEngine"]

@@ -1,0 +1,189 @@
+"""Trajectory-estimation serving engine: MAP solves as a batched service.
+
+``TrajectoryEngine`` is the estimation-workload sibling of
+:class:`~repro.serving.engine.ServeEngine`: instead of LM decode steps it
+serves :func:`~repro.core.map_estimate` requests.  The same production
+tricks apply:
+
+* **fixed-batch padding** -- every wave is exactly ``batch`` rows, so each
+  bucket length compiles ONE executable, reused forever (the executable
+  cache lives in :mod:`repro.core.batching`);
+* **pad-and-bucket** -- ragged record lengths are padded to power-of-two
+  block counts with masked measurements (exact, see ``batching``);
+* **row recycling / continuous batching** -- short waves are topped up by
+  recycling a live row, and the queue is drained in FIFO waves grouped by
+  bucket so one submit/collect cycle serves any mix of lengths;
+* **optional batch-axis sharding** -- pass a mesh (e.g. from
+  :func:`repro.launch.mesh.make_host_mesh`) and each wave is ``shard_map``-
+  sharded over the mesh's data axis, spreading requests across devices.
+
+API: ``submit(ts, y) -> ticket``; ``step()`` solves one wave; ``collect()``
+pops finished ``(ticket, MAPSolution)`` pairs; ``estimate(records)`` is the
+synchronous convenience wrapper.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batching import (
+    bucket_length,
+    map_estimate_batched,
+    pad_record,
+    slice_solution,
+)
+from repro.core.sde import LinearSDE, NonlinearSDE
+from repro.core.types import MAPSolution
+
+
+@dataclasses.dataclass
+class _Pending:
+    ticket: int
+    ts: np.ndarray
+    y: np.ndarray
+    n_pad: int
+
+
+class TrajectoryEngine:
+    """Queued, batched MAP-estimation service for one model.
+
+    Args:
+      model: shared :class:`LinearSDE` / :class:`NonlinearSDE`.
+      batch: fixed wave size (compiled batch).  With a mesh it must be
+        divisible by the mesh's ``batch_axis`` size.
+      method / nsub / mode / iterations / divergence_correction: forwarded
+        to :func:`~repro.core.map_estimate` for every request.
+      bucket_sizes: optional explicit padded-length buckets (multiples of
+        ``nsub``); default is power-of-two block counts.
+      mesh: optional ``jax.sharding.Mesh`` for batch-axis sharding.
+    """
+
+    def __init__(
+        self,
+        model: Union[LinearSDE, NonlinearSDE],
+        *,
+        batch: int = 8,
+        method: str = "parallel_rts",
+        nsub: int = 10,
+        mode: str = "euler",
+        iterations: int = 5,
+        divergence_correction: bool = False,
+        bucket_sizes: Optional[Sequence[int]] = None,
+        mesh=None,
+        batch_axis: str = "data",
+    ):
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        if mesh is not None and batch % mesh.shape[batch_axis]:
+            raise ValueError(
+                f"batch {batch} not divisible by mesh axis "
+                f"{batch_axis!r} size {mesh.shape[batch_axis]}")
+        self.model = model
+        self.batch = batch
+        self.method = method
+        self.nsub = nsub
+        self.mode = mode
+        self.iterations = iterations
+        self.divergence_correction = divergence_correction
+        self.bucket_sizes = bucket_sizes
+        self.mesh = mesh
+        self.batch_axis = batch_axis
+
+        self._queue: Deque[_Pending] = collections.deque()
+        self._done: Dict[int, MAPSolution] = {}
+        self._next_ticket = 0
+        self.waves = 0            # compiled-batch solves issued
+        self.recycled_rows = 0    # padding rows recycled into short waves
+
+    # -- submit / collect ---------------------------------------------------
+
+    def submit(self, ts: np.ndarray, y: np.ndarray) -> int:
+        """Enqueue one record; returns a ticket redeemable at collect()."""
+        ts = np.asarray(ts)
+        y = np.asarray(y)
+        if y.ndim != 2 or y.shape[0] < 1:
+            raise ValueError(
+                f"y must be (N, ny) with N >= 1, got shape {y.shape}")
+        if ts.shape != (y.shape[0] + 1,):
+            raise ValueError(
+                f"ts must be (N+1,) = {(y.shape[0] + 1,)}, got {ts.shape}")
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        n_pad = bucket_length(y.shape[0], self.nsub, self.bucket_sizes)
+        self._queue.append(_Pending(ticket, ts, y, n_pad))
+        return ticket
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def collect(self) -> List[Tuple[int, MAPSolution]]:
+        """Pop all finished (ticket, solution) pairs, ticket order."""
+        out = sorted(self._done.items())
+        self._done.clear()
+        return out
+
+    # -- wave processing ----------------------------------------------------
+
+    def _take_wave(self) -> List[_Pending]:
+        """FIFO wave: the oldest request fixes the bucket; later same-bucket
+        requests top the wave up to ``batch`` (others keep their place).
+        Scanning stops as soon as the wave is full, so draining Q queued
+        requests is O(Q), not O(Q^2/batch)."""
+        n_pad = self._queue[0].n_pad
+        wave: List[_Pending] = []
+        keep: Deque[_Pending] = collections.deque()
+        while self._queue and len(wave) < self.batch:
+            req = self._queue.popleft()
+            if req.n_pad == n_pad:
+                wave.append(req)
+            else:
+                keep.append(req)
+        keep.extend(self._queue)           # untouched tail, order preserved
+        self._queue = keep
+        return wave
+
+    def step(self) -> int:
+        """Solve one fixed-size wave; returns the number of requests
+        completed (0 if the queue is empty)."""
+        if not self._queue:
+            return 0
+        wave = self._take_wave()
+        n_pad = wave[0].n_pad
+        padded = [pad_record(r.ts, r.y, n_pad) for r in wave]
+        rows = padded + [padded[0]] * (self.batch - len(padded))
+        self.recycled_rows += self.batch - len(padded)
+        ts_b = jnp.asarray(np.stack([r[0] for r in rows]))
+        ys_b = jnp.asarray(np.stack([r[1] for r in rows]))
+        mask_b = jnp.asarray(np.stack([r[2] for r in rows]))
+        sol = map_estimate_batched(
+            self.model, ts_b, ys_b, method=self.method, nsub=self.nsub,
+            mode=self.mode, iterations=self.iterations,
+            divergence_correction=self.divergence_correction,
+            measurement_mask=mask_b, mesh=self.mesh,
+            batch_axis=self.batch_axis)
+        self.waves += 1
+        for row, req in enumerate(wave):
+            self._done[req.ticket] = slice_solution(sol, row, req.y.shape[0])
+        return len(wave)
+
+    def run(self) -> int:
+        """Drain the queue; returns the total number of requests solved."""
+        total = 0
+        while self._queue:
+            total += self.step()
+        return total
+
+    # -- synchronous convenience --------------------------------------------
+
+    def estimate(
+        self, records: Sequence[Tuple[np.ndarray, np.ndarray]],
+    ) -> List[MAPSolution]:
+        """Submit ``(ts, y)`` records, drain, return solutions in order."""
+        tickets = [self.submit(ts, y) for ts, y in records]
+        self.run()
+        got = dict(self.collect())
+        return [got[t] for t in tickets]

@@ -16,8 +16,6 @@ from __future__ import annotations
 
 import os
 import re
-import shutil
-import struct
 import tempfile
 from typing import Any, Optional
 

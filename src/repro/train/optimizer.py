@@ -10,14 +10,12 @@ from the in/out shardings of the jitted train step.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import TrainConfig
-from repro.distributed import sharding as shd
 
 
 class AdamWState(NamedTuple):

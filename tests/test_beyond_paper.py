@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (
     grid_lqt_from_linear, parallel_rts, sequential_rts, simulate_linear,

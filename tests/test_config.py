@@ -1,7 +1,5 @@
 """Config system + shape-suite + sharding-rule tests."""
 import jax
-import jax.numpy as jnp
-import pytest
 
 from repro.config import (
     SHAPE_SUITE, get_config, list_configs, shape_skip_reason,
@@ -55,7 +53,6 @@ def test_spec_axes_match_param_tree():
 
 
 def test_choose_pspec_divisibility_fallback():
-    import os
     # uses the single real device -> build a fake mesh via abstract mesh
     from jax.sharding import PartitionSpec as P
     mesh = jax.make_mesh((1, 1), ("data", "model"))

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (
     grid_lqt_from_linear, qp_map_from_grid, simulate_linear, time_grid,

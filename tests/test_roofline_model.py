@@ -7,7 +7,6 @@ analytic model ignores softmax/norm transcendentals and minor elementwise
 traffic, XLA ignores nothing; the roofline (benchmarks/roofline.py) uses
 the analytic numbers for looped production lowerings.
 """
-import dataclasses
 import sys
 from pathlib import Path
 

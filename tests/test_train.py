@@ -1,6 +1,5 @@
 """Training substrate tests: checkpoint fault tolerance, data determinism,
 trainer resume, loss descent on the learnable synthetic task."""
-import dataclasses
 import os
 
 import jax
@@ -13,9 +12,9 @@ from repro.models import transformer
 from repro.train import checkpoint as ckpt
 from repro.train.data import LMDataPipeline
 from repro.train.optimizer import (
-    adamw_init, cosine_schedule, opt_state_axes, zero1_logical,
+    adamw_init, cosine_schedule, zero1_logical,
 )
-from repro.train.trainer import Trainer, make_train_step
+from repro.train.trainer import Trainer
 
 
 def test_checkpoint_roundtrip(tmp_path):

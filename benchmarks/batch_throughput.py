@@ -2,10 +2,12 @@
 
 The paper's axis is time (span log T per problem); production serving also
 exploits the REQUEST axis -- many independent estimation problems solved as
-one compiled, batched program (``repro.core.batching``).  This benchmark
-reports problems/sec for sequential vs parallel methods across batch
-sizes: on accelerators the parallel method keeps per-problem latency flat
-while batching multiplies throughput until the device saturates.
+one compiled, batched program (``Estimator.solve(Problem.stacked(...))``).
+This benchmark reports problems/sec for sequential vs parallel methods
+across batch sizes: on accelerators the parallel method keeps per-problem
+latency flat while batching multiplies throughput until the device
+saturates.  The timed callable is the ahead-of-time ``Estimator.lower(
+problem).compile()`` executable -- zero Python dispatch in the loop.
 
     PYTHONPATH=src python benchmarks/batch_throughput.py [--smoke]
 """
@@ -25,7 +27,9 @@ import jax.numpy as jnp
 def run(batch_sizes=(1, 8, 32), T=64, nsub=10, mode="discrete",
         methods=("sequential_rts", "parallel_rts"), repeats=3, smoke=False):
     from repro.configs.wiener_velocity import WienerVelocityConfig
-    from repro.core import map_estimate_batched, simulate_linear, time_grid
+    from repro.core import (
+        Estimator, Problem, get_method, simulate_linear, time_grid,
+    )
 
     if smoke:
         T, repeats = 8, 1
@@ -38,14 +42,17 @@ def run(batch_sizes=(1, 8, 32), T=64, nsub=10, mode="discrete",
 
     rows = []
     for method in methods:
+        options = get_method(method).options_cls.from_legacy(
+            nsub=nsub, mode=mode)
+        est = Estimator(model, method=method, options=options)
         for B in batch_sizes:
             ys = jnp.broadcast_to(y, (B,) + y.shape)
-            solve = lambda: map_estimate_batched(
-                model, ts, ys, method=method, nsub=nsub, mode=mode)
-            solve().x.block_until_ready()          # compile + warmup
+            problem = Problem.stacked(model, ts, ys)
+            compiled = est.lower(problem).compile()      # AOT: no retrace
+            compiled(ts, ys).x.block_until_ready()       # warmup
             t0 = time.perf_counter()
             for _ in range(repeats):
-                solve().x.block_until_ready()
+                compiled(ts, ys).x.block_until_ready()
             dt = (time.perf_counter() - t0) / repeats
             rows.append({
                 "name": f"batch/{method}/B{B}_T{T}",

@@ -20,7 +20,10 @@ import jax.numpy as jnp
 def run(T_list=(64, 128, 256, 512), nsub=10, mode="euler", repeats=5,
         iterations=5, include_tf=False):
     from repro.configs.coordinated_turn import CoordinatedTurnConfig
-    from repro.core import iterated_map, simulate_nonlinear, time_grid
+    from repro.core import (
+        Estimator, IteratedOptions, Problem, get_method, simulate_nonlinear,
+        time_grid,
+    )
 
     ccfg = CoordinatedTurnConfig(iterations=iterations)
     model = ccfg.model()
@@ -33,9 +36,14 @@ def run(T_list=(64, 128, 256, 512), nsub=10, mode="euler", repeats=5,
         ts = time_grid(ccfg.t0, ccfg.tf, N, dtype=jnp.float32)
         _, y = simulate_nonlinear(model, ts, jax.random.PRNGKey(1))
         for method in methods:
-            fn = jax.jit(lambda yy, m=method: iterated_map(
-                model, ts, yy, iterations=iterations, method=m,
-                nsub=nsub, mode=mode).x)
+            inner = get_method(method).options_cls.from_legacy(
+                nsub=nsub, mode=mode)
+            est = Estimator(model, method=method,
+                            options=IteratedOptions(iterations=iterations,
+                                                    inner=inner))
+            compiled = est.lower(
+                Problem.single(model, ts, y)).compile()    # AOT executable
+            fn = lambda yy: compiled(ts, yy).x
             fn(y).block_until_ready()
             t0 = time.perf_counter()
             for _ in range(repeats):

@@ -5,17 +5,20 @@ parallelisation of continuous-time maximum-a-posteriori trajectory
 estimation": parallel Kalman-Bucy filtering, parallel continuous-time RTS
 and two-filter smoothing, and iterated linearisation for nonlinear models,
 all built on associative scans.
+
+The public surface is the ``Estimator``/``Problem``/``Solution`` triple:
+
+    est = Estimator(model, method="parallel_rts",
+                    options=ParallelOptions(nsub=10, mode="discrete"))
+    sol = est.solve(Problem.single(model, ts, y))   # -> Solution
+
+Methods and their option dataclasses live in the registry
+(:func:`register_method` / :func:`method_names`).  The old function entry
+points (``map_estimate`` & co.) remain as deprecation shims; see
+``docs/MIGRATION.md``.
 """
-from .api import map_estimate, METHODS
-from .batching import (
-    bucket_length,
-    cache_stats,
-    clear_cache,
-    map_estimate_batched,
-    map_estimate_ragged,
-    pad_record,
-    slice_solution,
-)
+from .api import map_estimate
+from .batching import map_estimate_batched, map_estimate_ragged
 from .combine import (
     affine_combine,
     apply_element_to_value,
@@ -23,9 +26,31 @@ from .combine import (
     lqt_combine,
     value_as_element,
 )
-from .nonlinear import iterated_map
+from .estimator import (
+    Estimator,
+    ExecutableCache,
+    Problem,
+    cache_stats,
+    clear_cache,
+    legacy_options,
+)
+from .nonlinear import iterated_map, iterated_solve
+from .options import (
+    IteratedOptions,
+    ParallelOptions,
+    SequentialOptions,
+    SolverOptions,
+    TwoFilterOptions,
+)
 from .oracle import qp_map_estimate, qp_map_from_grid
-from .registry import get_solver, method_names, register_method
+from .padding import bucket_length, pad_record, slice_solution
+from .registry import (
+    MethodSpec,
+    get_method,
+    get_solver,
+    method_names,
+    register_method,
+)
 from .parallel import parallel_backward, parallel_rts, parallel_two_filter
 from .pscan import distributed_scan, prefix_scan, suffix_scan
 from .sde import (
@@ -34,6 +59,7 @@ from .sde import (
     build_grid_lqt,
     grid_lqt_from_linear,
     grid_lqt_from_nonlinear,
+    om_cost_grid,
     om_cost_linear,
     om_cost_nonlinear,
     simulate_linear,
@@ -47,20 +73,29 @@ from .sequential import (
 )
 from .types import (
     AffineElement,
+    BucketInfo,
     GridLQT,
     LQTElement,
     MAPSolution,
+    PaddingReport,
+    Solution,
     ValueFn,
 )
 
 __all__ = [
-    "AffineElement", "GridLQT", "LQTElement", "MAPSolution", "ValueFn",
-    "LinearSDE", "NonlinearSDE", "METHODS",
-    "map_estimate", "iterated_map",
-    "map_estimate_batched", "map_estimate_ragged",
-    "bucket_length", "pad_record", "slice_solution",
+    # unified surface
+    "Estimator", "Problem", "Solution",
+    "SolverOptions", "SequentialOptions", "ParallelOptions",
+    "TwoFilterOptions", "IteratedOptions",
+    "PaddingReport", "BucketInfo", "ExecutableCache",
     "cache_stats", "clear_cache",
-    "get_solver", "method_names", "register_method",
+    # registry
+    "MethodSpec", "get_method", "get_solver", "method_names",
+    "register_method", "METHODS",
+    # models / types
+    "AffineElement", "GridLQT", "LQTElement", "MAPSolution", "ValueFn",
+    "LinearSDE", "NonlinearSDE",
+    # solver building blocks
     "parallel_backward", "parallel_rts", "parallel_two_filter",
     "sequential_backward", "sequential_rts", "sequential_two_filter",
     "prefix_scan", "suffix_scan", "distributed_scan",
@@ -68,6 +103,19 @@ __all__ = [
     "value_as_element", "elem_min_initial",
     "build_grid_lqt", "grid_lqt_from_linear", "grid_lqt_from_nonlinear",
     "simulate_linear", "simulate_nonlinear", "time_grid",
-    "om_cost_linear", "om_cost_nonlinear",
+    "om_cost_grid", "om_cost_linear", "om_cost_nonlinear",
     "qp_map_estimate", "qp_map_from_grid",
+    "iterated_solve",
+    "bucket_length", "pad_record", "slice_solution",
+    # deprecated shims + migration helper
+    "map_estimate", "iterated_map",
+    "map_estimate_batched", "map_estimate_ragged",
+    "legacy_options",
 ]
+
+
+def __getattr__(name: str):
+    if name == "METHODS":      # deprecated live view; see api.__getattr__
+        from . import api
+        return api.METHODS
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

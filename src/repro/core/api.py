@@ -1,36 +1,37 @@
 """Top-level user API for continuous-time MAP trajectory estimation.
 
-    from repro.core import map_estimate
-    sol = map_estimate(model, ts, y, method="parallel_rts")
+    from repro.core import Estimator, Problem
+
+    est = Estimator(model, method="parallel_rts",
+                    options=ParallelOptions(nsub=10, mode="discrete"))
+    sol = est.solve(Problem.single(model, ts, y))
 
 ``model`` is a :class:`~repro.core.sde.LinearSDE` or
-:class:`~repro.core.sde.NonlinearSDE`; nonlinear models are solved with the
-iterated linearisation of section 4.4.  All solvers are jit-friendly pure
-functions; batches of measurement records are handled by
-:func:`~repro.core.batching.map_estimate_batched` (stacked records) and
-:func:`~repro.core.batching.map_estimate_ragged` (pad-and-bucket for
-ragged record lengths).
+:class:`~repro.core.sde.NonlinearSDE`; nonlinear models are solved with
+the iterated linearisation of section 4.4 (outer loop controlled by
+:class:`~repro.core.options.IteratedOptions`).  Batches of measurement
+records are :meth:`Problem.stacked` (records sharing a length) and
+:meth:`Problem.ragged` (pad-and-bucket for ragged record lengths).
 
 ``measurement_mask`` zeroes the information contribution of selected
 measurement intervals (mask 0.0) while keeping the dynamics prior intact;
 it is what makes length-padding exact (a padded tail beyond ``t_f`` with
 no measurements adds zero Onsager-Machlup cost and leaves the MAP estimate
 on the real window unchanged), and it doubles as a missing-data mask.
+
+This module keeps the LEGACY entry point :func:`map_estimate` as a thin
+deprecation shim over the Estimator surface (see ``docs/MIGRATION.md``).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional, Union
 
 import jax.numpy as jnp
 
-from .nonlinear import iterated_map
-from .registry import get_solver, method_names
-from .sde import LinearSDE, NonlinearSDE, grid_lqt_from_linear
-
-# Static snapshot of the BUILT-IN methods (back-compat export).  Methods
-# added later via ``registry.register_method`` appear in ``method_names()``
-# (the live view), not here.
-METHODS = method_names()
+from .estimator import Estimator, Problem, legacy_options
+from .registry import method_names
+from .sde import LinearSDE, NonlinearSDE
 
 
 def map_estimate(
@@ -45,14 +46,28 @@ def map_estimate(
     divergence_correction: bool = False,
     measurement_mask: Optional[jnp.ndarray] = None,
 ):
-    solver = get_solver(method)
+    """Deprecated shim: use ``Estimator(model, method=..., options=...)
+    .solve(Problem.single(model, ts, y))`` instead."""
+    warnings.warn(
+        "map_estimate is deprecated; use repro.core.Estimator with "
+        "Problem.single (see docs/MIGRATION.md)",
+        DeprecationWarning, stacklevel=2)
+    est = Estimator(model, method=method,
+                    options=legacy_options(
+                        model, method, nsub=nsub, mode=mode,
+                        iterations=iterations,
+                        divergence_correction=divergence_correction))
+    return est.solve(Problem.single(model, ts, y,
+                                    measurement_mask=measurement_mask))
 
-    if isinstance(model, NonlinearSDE):
-        return iterated_map(
-            model, ts, y, iterations=iterations, method=method, nsub=nsub,
-            mode=mode, divergence_correction=divergence_correction,
-            measurement_mask=measurement_mask)
 
-    grid = grid_lqt_from_linear(model, ts, y,
-                                measurement_mask=measurement_mask)
-    return solver(grid, nsub, mode)
+def __getattr__(name: str):
+    # METHODS used to be a tuple snapshot frozen at import time, silently
+    # missing methods added later via registry.register_method.  It is now
+    # a live (deprecated) view; call method_names() instead.
+    if name == "METHODS":
+        warnings.warn(
+            "METHODS is deprecated; call repro.core.method_names() for the "
+            "live method list", DeprecationWarning, stacklevel=2)
+        return method_names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,109 +1,58 @@
-"""Batched multi-trajectory MAP estimation: parallelism over the REQUEST axis.
+"""Legacy batched entry points (deprecation shims).
 
-The paper parallelises a single estimation problem over time; production
-serving additionally wants many independent problems solved as one compiled
-program.  This module provides that layer:
+The request-axis layer lives on the unified surface now:
 
-* :func:`map_estimate_batched` -- ``vmap`` of :func:`~repro.core.api.
-  map_estimate` over stacked measurement records (linear and nonlinear
-  models, all registered methods), optionally ``shard_map``-sharded over a
-  mesh axis so the batch spreads across devices.
-* :func:`map_estimate_ragged` -- pad-and-bucket front-end for records of
-  unequal length: each record is padded to a bucket length (a power-of-two
-  number of ``nsub``-substep blocks) with masked-out measurements, so a
-  handful of executables serves any mix of lengths.
-* an explicit executable cache keyed by
-  ``(model, batch shape, method, nsub, mode, ...)`` -- one trace per key,
-  inspectable via :func:`cache_stats` (the bucketing above keeps the key
-  space small).
+* stacked records -> ``Estimator.solve(Problem.stacked(model, ts, ys))``
+* ragged records  -> ``Estimator.solve(Problem.ragged(model, records))``
 
-Padding is EXACT, not approximate: a padded tail beyond ``t_f`` carries
-``measurement_mask = 0`` so it contributes no measurement cost, and the
-dynamics cost of the tail is zero at the optimum (the extension follows the
-drift), hence the MAP estimate restricted to the real window is unchanged
-(see :func:`~repro.core.sde.build_grid_lqt`).  Tests verify padded == unpadded
-to round-off.
+with the executable cache absorbed into :mod:`repro.core.estimator`
+(:func:`~repro.core.estimator.cache_stats` /
+:func:`~repro.core.estimator.clear_cache` re-exported here) and the
+pad-and-bucket utilities in :mod:`repro.core.padding`.  The functions
+below construct the equivalent ``Problem``/``Estimator`` and emit a
+``DeprecationWarning``; see ``docs/MIGRATION.md``.
 """
 from __future__ import annotations
 
-import collections
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+import warnings
+from typing import List, Optional, Sequence, Union
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .api import map_estimate
+from .estimator import (
+    Estimator,
+    Problem,
+    cache_stats,
+    clear_cache,
+    legacy_options,
+)
+from .padding import (
+    bucket_length,
+    pad_record,
+    slice_solution,
+)
 from .sde import LinearSDE, NonlinearSDE
-from .types import MAPSolution
+from .types import Solution
 
 Model = Union[LinearSDE, NonlinearSDE]
 
-
-# ---------------------------------------------------------------------------
-# Executable cache
-# ---------------------------------------------------------------------------
-
-
-class _ExecutableCache:
-    """LRU cache of jitted batched solvers keyed by (model, shapes, method,
-    nsub, mode, iterations, divergence_correction, mesh, batch_axis).
-
-    Models are frozen dataclasses holding arrays (unhashable), so the key
-    uses ``id(model)``; a strong reference to the model (and mesh) is kept
-    in the entry so the id cannot be recycled while cached.  ``maxsize``
-    bounds retained executables/models: callers constructing a fresh model
-    per request never hit (new id each time) and would otherwise grow the
-    cache without bound -- reuse one model object to get executable reuse.
-    """
-
-    def __init__(self, maxsize: int = 128) -> None:
-        self._entries: "collections.OrderedDict[tuple, tuple]" = (
-            collections.OrderedDict())
-        self.maxsize = maxsize
-        self.hits = 0
-        self.misses = 0
-
-    def get(self, model: Model, mesh, key_tail: tuple,
-            build) -> "jax.stages.Wrapped":
-        key = (id(model), None if mesh is None else id(mesh)) + key_tail
-        entry = self._entries.get(key)
-        if entry is not None:
-            self.hits += 1
-            self._entries.move_to_end(key)
-            return entry[0]
-        self.misses += 1
-        fn = build()
-        self._entries[key] = (fn, model, mesh)
-        if len(self._entries) > self.maxsize:
-            self._entries.popitem(last=False)
-        return fn
-
-    def clear(self) -> None:
-        self._entries.clear()
-        self.hits = 0
-        self.misses = 0
-
-    def __len__(self) -> int:
-        return len(self._entries)
+# Re-exports: the cache and padding helpers used to live here.
+__all__ = [
+    "map_estimate_batched", "map_estimate_ragged",
+    "Estimator", "Problem", "legacy_options",
+    "cache_stats", "clear_cache",
+    "bucket_length", "pad_record", "slice_solution",
+]
 
 
-_CACHE = _ExecutableCache()
-
-
-def cache_stats() -> Dict[str, int]:
-    """Executable-cache counters: one miss per compiled (shape, method,
-    nsub, mode, ...) combination, hits for every reuse."""
-    return {"size": len(_CACHE), "hits": _CACHE.hits, "misses": _CACHE.misses}
-
-
-def clear_cache() -> None:
-    _CACHE.clear()
-
-
-# ---------------------------------------------------------------------------
-# Batched entry point
-# ---------------------------------------------------------------------------
+def _legacy_estimator(model, method, nsub, mode, iterations,
+                      divergence_correction, mesh, batch_axis) -> Estimator:
+    return Estimator(
+        model, method=method,
+        options=legacy_options(model, method, nsub=nsub, mode=mode,
+                               iterations=iterations,
+                               divergence_correction=divergence_correction),
+        mesh=mesh, batch_axis=batch_axis)
 
 
 def map_estimate_batched(
@@ -119,155 +68,21 @@ def map_estimate_batched(
     measurement_mask: Optional[jnp.ndarray] = None,
     mesh=None,
     batch_axis: str = "data",
-) -> MAPSolution:
-    """Solve a stacked batch of estimation problems as one compiled program.
-
-    Args:
-      model: shared :class:`LinearSDE` / :class:`NonlinearSDE`.
-      ts: time grid, shared ``(N+1,)`` or per-record ``(B, N+1)``.
-      ys: stacked measurement records ``(B, N, ny)``.
-      measurement_mask: optional ``(B, N)`` of 0/1 -- masked intervals
-        contribute no measurement information (padding / missing data).
-      mesh: optional ``jax.sharding.Mesh``; when given the batch axis is
-        sharded over ``mesh.shape[batch_axis]`` devices with ``shard_map``
-        (``B`` must be divisible by that axis size).
-
-    Returns a :class:`MAPSolution` whose fields carry a leading batch axis.
-    """
-    ys = jnp.asarray(ys)
-    if ys.ndim != 3:
-        raise ValueError(f"ys must be (B, N, ny), got shape {ys.shape}")
-    ts = jnp.asarray(ts)
-    ts_batched = ts.ndim == 2
-    B, N = ys.shape[0], ys.shape[1]
-    if ts.shape[-1] != N + 1:
-        raise ValueError(
-            f"ts has {ts.shape[-1]} points but ys has {N} intervals "
-            f"(need N+1 = {N + 1})")
-    if ts_batched and ts.shape[0] != B:
-        raise ValueError(f"ts batch {ts.shape[0]} != ys batch {B}")
-    masked = measurement_mask is not None
-    if masked:
-        measurement_mask = jnp.asarray(measurement_mask)
-        if measurement_mask.shape != (B, N):
-            raise ValueError(
-                f"measurement_mask must be {(B, N)}, got "
-                f"{measurement_mask.shape}")
-    if mesh is not None:
-        axis = mesh.shape[batch_axis]
-        if B % axis:
-            raise ValueError(
-                f"batch {B} not divisible by mesh axis {batch_axis!r} "
-                f"size {axis}")
-
-    key_tail = (ts.shape, ys.shape, str(ys.dtype), masked, method, nsub,
-                mode, iterations, divergence_correction, batch_axis)
-
-    def build():
-        if masked:
-            def solve_one(t, y, m):
-                return map_estimate(
-                    model, t, y, method=method, nsub=nsub, mode=mode,
-                    iterations=iterations,
-                    divergence_correction=divergence_correction,
-                    measurement_mask=m)
-            in_axes = (0 if ts_batched else None, 0, 0)
-        else:
-            def solve_one(t, y):
-                return map_estimate(
-                    model, t, y, method=method, nsub=nsub, mode=mode,
-                    iterations=iterations,
-                    divergence_correction=divergence_correction)
-            in_axes = (0 if ts_batched else None, 0)
-        fn = jax.vmap(solve_one, in_axes=in_axes)
-        if mesh is not None:
-            from repro.distributed.sharding import shard_over_batch
-            fn = shard_over_batch(
-                fn, mesh, batch_axis,
-                (ts_batched, True) + ((True,) if masked else ()))
-        return jax.jit(fn)
-
-    fn = _CACHE.get(model, mesh, key_tail, build)
-    args = (ts, ys) + ((measurement_mask,) if masked else ())
-    return fn(*args)
-
-
-# ---------------------------------------------------------------------------
-# Pad-and-bucket for ragged record lengths
-# ---------------------------------------------------------------------------
-
-
-def _next_pow2(n: int) -> int:
-    return 1 << max(0, int(n - 1).bit_length())
-
-
-def bucket_length(
-    N: int, nsub: int, bucket_sizes: Optional[Sequence[int]] = None,
-) -> int:
-    """Padded interval count for a record of ``N`` intervals.
-
-    Default rule: the smallest power-of-two number of ``nsub``-substep
-    blocks that fits, i.e. ``nsub * 2^ceil(log2(N / nsub))`` -- always a
-    multiple of ``nsub`` (required by the parallel methods' blocking) and
-    at most ~2x overhead.  Explicit ``bucket_sizes`` (multiples of
-    ``nsub``) override the rule; the smallest fitting bucket is used.
-    """
-    if bucket_sizes is not None:
-        for size in bucket_sizes:
-            if size % nsub:
-                raise ValueError(
-                    f"bucket size {size} not a multiple of nsub={nsub}")
-        fitting = [s for s in bucket_sizes if s >= N]
-        if not fitting:
-            raise ValueError(
-                f"record length {N} exceeds largest bucket "
-                f"{max(bucket_sizes)}")
-        return min(fitting)
-    blocks = -(-N // nsub)          # ceil
-    return nsub * _next_pow2(blocks)
-
-
-def pad_record(
-    ts: np.ndarray, y: np.ndarray, n_pad: int,
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Pad one record to ``n_pad`` intervals.
-
-    The time grid is extended past ``t_f`` with the final step size, padded
-    measurements are zeros, and the returned mask marks them as carrying no
-    information.  Returns ``(ts_pad (n_pad+1,), y_pad (n_pad, ny),
-    mask (n_pad,))``.
-    """
-    ts = np.asarray(ts)
-    y = np.asarray(y)
-    N = y.shape[0]
-    if N < 1:
-        raise ValueError("record must have at least one interval")
-    if ts.shape[0] != N + 1:
-        raise ValueError(f"ts has {ts.shape[0]} points for {N} intervals")
-    if n_pad < N:
-        raise ValueError(f"n_pad={n_pad} < record length {N}")
-    extra = n_pad - N
-    dt_last = ts[-1] - ts[-2]
-    ts_pad = np.concatenate(
-        [ts, ts[-1] + dt_last * np.arange(1, extra + 1, dtype=ts.dtype)])
-    y_pad = np.concatenate(
-        [y, np.zeros((extra,) + y.shape[1:], dtype=y.dtype)], axis=0)
-    mask = np.concatenate(
-        [np.ones(N, dtype=y.dtype), np.zeros(extra, dtype=y.dtype)])
-    return ts_pad, y_pad, mask
-
-
-def slice_solution(sol: MAPSolution, row: int, N: int) -> MAPSolution:
-    """Extract record ``row`` from a batched solution, un-padded to ``N``
-    intervals (``N+1`` trajectory points)."""
-    take = lambda a: None if a is None else a[row, :N + 1]
-    return MAPSolution(x=take(sol.x), S=take(sol.S), v=take(sol.v),
-                       cov=take(sol.cov))
+) -> Solution:
+    """Deprecated shim: use ``Estimator(...).solve(Problem.stacked(...))``."""
+    warnings.warn(
+        "map_estimate_batched is deprecated; use repro.core.Estimator with "
+        "Problem.stacked (see docs/MIGRATION.md)",
+        DeprecationWarning, stacklevel=2)
+    est = _legacy_estimator(model, method, nsub, mode, iterations,
+                            divergence_correction, mesh, batch_axis)
+    return est.solve(Problem.stacked(model, ts, ys,
+                                     measurement_mask=measurement_mask))
 
 
 def map_estimate_ragged(
     model: Model,
-    records: Sequence[Tuple[np.ndarray, np.ndarray]],
+    records: Sequence,
     *,
     method: str = "parallel_rts",
     nsub: int = 10,
@@ -278,42 +93,14 @@ def map_estimate_ragged(
     pad_batch: bool = True,
     mesh=None,
     batch_axis: str = "data",
-) -> List[MAPSolution]:
-    """Solve records of unequal length via pad-and-bucket batching.
-
-    ``records`` is a sequence of ``(ts_i, y_i)`` pairs with ``ts_i``
-    ``(N_i+1,)`` and ``y_i`` ``(N_i, ny)``.  Records are grouped by padded
-    length (:func:`bucket_length`), each bucket is solved with ONE batched
-    call (batch padded to a power of two when ``pad_batch``, recycling row
-    0, so executables are shared across calls with different record
-    counts), and results are un-padded and returned in input order.
-    """
-    buckets: Dict[int, List[int]] = {}
-    lengths: List[int] = []
-    for i, (ts_i, y_i) in enumerate(records):
-        N_i = np.asarray(y_i).shape[0]
-        lengths.append(N_i)
-        n_pad = bucket_length(N_i, nsub, bucket_sizes)
-        buckets.setdefault(n_pad, []).append(i)
-
-    out: List[Optional[MAPSolution]] = [None] * len(records)
-    for n_pad, idxs in sorted(buckets.items()):
-        padded = [pad_record(records[i][0], records[i][1], n_pad)
-                  for i in idxs]
-        B = len(padded)
-        B_pad = _next_pow2(B) if pad_batch else B
-        if mesh is not None:
-            axis = mesh.shape[batch_axis]
-            B_pad = -(-B_pad // axis) * axis
-        rows = padded + [padded[0]] * (B_pad - B)   # recycle row 0
-        ts_b = jnp.asarray(np.stack([r[0] for r in rows]))
-        ys_b = jnp.asarray(np.stack([r[1] for r in rows]))
-        mask_b = jnp.asarray(np.stack([r[2] for r in rows]))
-        sol = map_estimate_batched(
-            model, ts_b, ys_b, method=method, nsub=nsub, mode=mode,
-            iterations=iterations,
-            divergence_correction=divergence_correction,
-            measurement_mask=mask_b, mesh=mesh, batch_axis=batch_axis)
-        for row, i in enumerate(idxs):
-            out[i] = slice_solution(sol, row, lengths[i])
-    return out  # type: ignore[return-value]
+) -> List[Solution]:
+    """Deprecated shim: use ``Estimator(...).solve(Problem.ragged(...))``."""
+    warnings.warn(
+        "map_estimate_ragged is deprecated; use repro.core.Estimator with "
+        "Problem.ragged (see docs/MIGRATION.md)",
+        DeprecationWarning, stacklevel=2)
+    est = _legacy_estimator(model, method, nsub, mode, iterations,
+                            divergence_correction, mesh, batch_axis)
+    return est.solve(Problem.ragged(model, records,
+                                    bucket_sizes=bucket_sizes,
+                                    pad_batch=pad_batch))

@@ -1,0 +1,560 @@
+"""The unified estimation surface: ``Estimator.solve(Problem) -> Solution``.
+
+One composable API replaces the old quintet of entry points
+(``map_estimate`` / ``iterated_map`` / ``map_estimate_batched`` /
+``map_estimate_ragged`` / ad-hoc engine plumbing):
+
+* :class:`Problem` describes WHAT to solve -- model + time grid +
+  measurements (+ optional mask / warm start), in one of three layouts
+  built by :meth:`Problem.single`, :meth:`Problem.stacked` (records
+  sharing a length) and :meth:`Problem.ragged` (pad-and-bucket over
+  unequal lengths).
+* :class:`~repro.core.options.SolverOptions` subclasses describe HOW --
+  each registered method owns its options dataclass
+  (:mod:`repro.core.registry`), so knobs are validated at construction
+  and never leak into unrelated signatures.
+* :class:`Estimator` binds (model, method, options, mesh) and compiles
+  ONE executable per (problem layout, options) key, cached in the
+  module-level executable cache (inspect with :func:`cache_stats`).
+  ``.solve`` runs it; ``.lower`` returns the ``jax.stages.Lowered`` for
+  ahead-of-time compilation.
+* :class:`~repro.core.types.Solution` is the result: the MAP trajectory
+  and filter information plus diagnostics (Onsager-Machlup cost,
+  per-iteration cost trace for nonlinear solves, bucket/padding report
+  for ragged solves).
+
+Nonlinear models are solved with the iterated linearisation of section
+4.4 (:func:`repro.core.nonlinear.iterated_solve`); wrap the inner method
+options in :class:`~repro.core.options.IteratedOptions` to control the
+outer loop.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .nonlinear import iterated_solve
+from .options import IteratedOptions, SolverOptions
+from .padding import bucket_length, next_pow2, pad_record, slice_solution
+from .registry import MethodSpec, get_method
+from .sde import (
+    LinearSDE,
+    NonlinearSDE,
+    grid_lqt_from_linear,
+    om_cost_grid,
+)
+from .types import BucketInfo, PaddingReport, Solution
+
+Model = Union[LinearSDE, NonlinearSDE]
+Records = Sequence[Tuple[np.ndarray, np.ndarray]]
+
+
+# ---------------------------------------------------------------------------
+# Executable cache (absorbed from the old core/batching.py)
+# ---------------------------------------------------------------------------
+
+
+class ExecutableCache:
+    """LRU cache of jitted solvers keyed by (model, mesh, method, options,
+    problem layout).
+
+    Models are frozen dataclasses holding arrays (unhashable), so the key
+    uses ``id(model)``; a strong reference to the model (and mesh) is kept
+    in the entry so the id cannot be recycled while cached.  ``maxsize``
+    bounds retained executables/models: callers constructing a fresh model
+    per request never hit (new id each time) and would otherwise grow the
+    cache without bound -- reuse one model object to get executable reuse.
+    """
+
+    def __init__(self, maxsize: int = 128) -> None:
+        self._entries: "collections.OrderedDict[tuple, tuple]" = (
+            collections.OrderedDict())
+        self.maxsize = maxsize
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, model: Model, mesh, key_tail: tuple, build):
+        key = (id(model), None if mesh is None else id(mesh)) + key_tail
+        entry = self._entries.get(key)
+        if entry is not None:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return entry[0]
+        self.misses += 1
+        fn = build()
+        self._entries[key] = (fn, model, mesh)
+        if len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+        return fn
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+_CACHE = ExecutableCache()
+
+
+def cache_stats() -> Dict[str, int]:
+    """Default executable-cache counters: one miss per compiled (layout,
+    method, options) combination, hits for every reuse."""
+    return {"size": len(_CACHE), "hits": _CACHE.hits, "misses": _CACHE.misses}
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# Problem
+# ---------------------------------------------------------------------------
+
+
+def _check_mask(mask, shape) -> jnp.ndarray:
+    mask = jnp.asarray(mask)
+    if mask.shape != shape:
+        raise ValueError(
+            f"measurement_mask must have shape {shape}, got {mask.shape}")
+    if jnp.issubdtype(mask.dtype, jnp.bool_) or jnp.issubdtype(
+            mask.dtype, jnp.integer):
+        mask = mask.astype(jnp.result_type(float))   # 0/1 masks are welcome
+    elif not jnp.issubdtype(mask.dtype, jnp.floating):
+        raise ValueError(
+            f"measurement_mask must be a real 0/1 array (it scales R^-1), "
+            f"got dtype {mask.dtype}")
+    return mask
+
+
+def _check_x_init(model, x_init, N: int, batch: Optional[int]):
+    if x_init is None:
+        return None
+    if not isinstance(model, NonlinearSDE):
+        raise ValueError(
+            "x_init is only meaningful for NonlinearSDE problems (it warm-"
+            "starts the iterated linearisation)")
+    x_init = jnp.asarray(x_init)
+    nx = model.nx
+    shared = {(nx,), (N + 1, nx)}
+    if batch is None:
+        if x_init.shape not in shared:
+            raise ValueError(
+                f"x_init must be ({nx},) or ({N + 1}, {nx}), "
+                f"got {x_init.shape}")
+    else:
+        batched = {(batch, nx), (batch, N + 1, nx)}
+        if x_init.shape not in shared | batched:
+            raise ValueError(
+                f"x_init must be shared ({nx},)/({N + 1}, {nx}) or "
+                f"per-record ({batch}, {nx})/({batch}, {N + 1}, {nx}), "
+                f"got {x_init.shape}")
+    return x_init
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Problem:
+    """One estimation workload: model + data (+ optional mask/warm start).
+
+    Build via :meth:`single`, :meth:`stacked` or :meth:`ragged` -- the
+    constructors validate shapes/dtypes up front so errors surface at
+    construction, not inside a trace.  ``kind`` records the layout; for
+    ragged problems ``ts``/``y`` (and a per-record ``x_init``) are tuples
+    of per-record arrays.
+    """
+
+    model: Model
+    ts: Any
+    y: Any
+    measurement_mask: Optional[jnp.ndarray] = None
+    x_init: Any = None
+    kind: str = "single"
+    bucket_sizes: Optional[Tuple[int, ...]] = None
+    pad_batch: bool = True
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def single(cls, model: Model, ts, y, *, measurement_mask=None,
+               x_init=None) -> "Problem":
+        """One record: ``ts`` ``(N+1,)``, ``y`` ``(N, ny)``."""
+        ts = jnp.asarray(ts)
+        y = jnp.asarray(y)
+        if y.ndim != 2 or y.shape[0] < 1:
+            raise ValueError(f"y must be (N, ny) with N >= 1, got {y.shape}")
+        N = y.shape[0]
+        if ts.shape != (N + 1,):
+            raise ValueError(f"ts must be (N+1,) = {(N + 1,)}, got {ts.shape}")
+        if measurement_mask is not None:
+            measurement_mask = _check_mask(measurement_mask, (N,))
+        x_init = _check_x_init(model, x_init, N, None)
+        return cls(model, ts, y, measurement_mask, x_init, kind="single")
+
+    @classmethod
+    def stacked(cls, model: Model, ts, ys, *, measurement_mask=None,
+                x_init=None) -> "Problem":
+        """Stacked records ``ys`` ``(B, N, ny)`` sharing the interval
+        count; ``ts`` shared ``(N+1,)`` or per-record ``(B, N+1)``.
+
+        ``x_init`` (nonlinear models): shared ``(nx,)`` / ``(N+1, nx)``
+        or per-record ``(B, nx)`` / ``(B, N+1, nx)``.  If ``B == N+1``
+        makes a rank-2 shape ambiguous, the per-record reading wins --
+        tile to ``(B, N+1, nx)`` to force a shared trajectory."""
+        ys = jnp.asarray(ys)
+        if ys.ndim != 3:
+            raise ValueError(f"ys must be (B, N, ny), got shape {ys.shape}")
+        ts = jnp.asarray(ts)
+        B, N = ys.shape[0], ys.shape[1]
+        if ts.shape[-1] != N + 1:
+            raise ValueError(
+                f"ts has {ts.shape[-1]} points but ys has {N} intervals "
+                f"(need N+1 = {N + 1})")
+        if ts.ndim == 2 and ts.shape[0] != B:
+            raise ValueError(f"ts batch {ts.shape[0]} != ys batch {B}")
+        if ts.ndim not in (1, 2):
+            raise ValueError(f"ts must be (N+1,) or (B, N+1), got {ts.shape}")
+        if measurement_mask is not None:
+            measurement_mask = _check_mask(measurement_mask, (B, N))
+        x_init = _check_x_init(model, x_init, N, B)
+        return cls(model, ts, ys, measurement_mask, x_init, kind="stacked")
+
+    @classmethod
+    def ragged(cls, model: Model, records: Records, *, x_init=None,
+               bucket_sizes: Optional[Sequence[int]] = None,
+               pad_batch: bool = True) -> "Problem":
+        """Records of unequal length: ``records`` is a sequence of
+        ``(ts_i, y_i)`` pairs with ``ts_i`` ``(N_i+1,)``, ``y_i``
+        ``(N_i, ny)``.  ``x_init`` may be one shared ``(nx,)`` point or a
+        sequence of per-record ``(nx,)`` points.  Solved by pad-and-bucket
+        (see :mod:`repro.core.padding`); the returned solutions carry a
+        :class:`~repro.core.types.PaddingReport`.
+        """
+        records = tuple(records)
+        if not records:
+            raise ValueError("records must be non-empty")
+        ts_all, y_all = [], []
+        for i, (ts_i, y_i) in enumerate(records):
+            ts_i = np.asarray(ts_i)
+            y_i = np.asarray(y_i)
+            if y_i.ndim != 2 or y_i.shape[0] < 1:
+                raise ValueError(
+                    f"record {i}: y must be (N, ny) with N >= 1, "
+                    f"got {y_i.shape}")
+            if ts_i.shape != (y_i.shape[0] + 1,):
+                raise ValueError(
+                    f"record {i}: ts must be (N+1,) = "
+                    f"{(y_i.shape[0] + 1,)}, got {ts_i.shape}")
+            ts_all.append(ts_i)
+            y_all.append(y_i)
+        if x_init is not None:
+            if not isinstance(model, NonlinearSDE):
+                raise ValueError(
+                    "x_init is only meaningful for NonlinearSDE problems")
+            x_init = np.asarray(x_init)
+            nx = model.nx
+            if x_init.shape not in {(nx,), (len(records), nx)}:
+                raise ValueError(
+                    f"ragged x_init must be ({nx},) shared or "
+                    f"({len(records)}, {nx}) per-record points, "
+                    f"got {x_init.shape}")
+        return cls(model, tuple(ts_all), tuple(y_all), None, x_init,
+                   kind="ragged",
+                   bucket_sizes=None if bucket_sizes is None
+                   else tuple(bucket_sizes),
+                   pad_batch=pad_batch)
+
+    # -- layout helpers -----------------------------------------------------
+
+    @property
+    def num_records(self) -> int:
+        if self.kind == "single":
+            return 1
+        if self.kind == "stacked":
+            return self.y.shape[0]
+        return len(self.y)
+
+    @property
+    def lengths(self) -> Tuple[int, ...]:
+        """Interval count per record."""
+        if self.kind == "single":
+            return (self.y.shape[0],)
+        if self.kind == "stacked":
+            return (self.y.shape[1],) * self.y.shape[0]
+        return tuple(y_i.shape[0] for y_i in self.y)
+
+
+# ---------------------------------------------------------------------------
+# Estimator
+# ---------------------------------------------------------------------------
+
+
+def _solve_arrays(model: Model, spec: MethodSpec, options, ts, y, mask,
+                  x_init, diagnostics: bool = True) -> Solution:
+    """Solve ONE record; the traced core every executable is built from.
+
+    ``diagnostics=False`` skips the Onsager-Machlup cost evaluation (a
+    pinv/eval pass over the grid per solve -- small next to the solve, but
+    pure overhead for callers that never read ``Solution.cost``).
+    """
+    if isinstance(model, NonlinearSDE):
+        inner = options.inner
+        sol, trace = iterated_solve(
+            model, ts, y, lambda grid: spec.solver(grid, inner),
+            iterations=options.iterations,
+            divergence_correction=options.divergence_correction,
+            x_init=x_init, measurement_mask=mask,
+            track_costs=diagnostics)
+        if not diagnostics:
+            return Solution(x=sol.x, S=sol.S, v=sol.v, cov=sol.cov)
+        return Solution(x=sol.x, S=sol.S, v=sol.v, cov=sol.cov,
+                        cost=trace[-1], cost_trace=trace)
+    grid = grid_lqt_from_linear(model, ts, y, measurement_mask=mask)
+    sol = spec.solver(grid, options)
+    return Solution(x=sol.x, S=sol.S, v=sol.v, cov=sol.cov,
+                    cost=om_cost_grid(grid, sol.x) if diagnostics else None)
+
+
+def legacy_options(model: Model, method: str, *, nsub=None, mode=None,
+                   iterations=None, divergence_correction=None):
+    """Map the old kwarg soup onto the method's options dataclass
+    (deprecation-shim support; fields a method does not declare are
+    dropped, mirroring how the old dispatch ignored them)."""
+    spec = get_method(method)
+    inner = spec.options_cls.from_legacy(nsub=nsub, mode=mode)
+    if isinstance(model, NonlinearSDE):
+        outer = {k: v for k, v in
+                 dict(iterations=iterations,
+                      divergence_correction=divergence_correction).items()
+                 if v is not None}
+        return IteratedOptions(inner=inner, **outer)
+    return inner
+
+
+class Estimator:
+    """Compiled MAP estimation for one model + method + options.
+
+    Args:
+      model: shared :class:`LinearSDE` / :class:`NonlinearSDE`; problems
+        passed to :meth:`solve` must be built with this model object (the
+        executable cache is anchored on it).
+      method: registered method name (see
+        :func:`repro.core.registry.method_names`).
+      options: instance of the method's options class
+        (:class:`~repro.core.options.SolverOptions` subclass); for
+        nonlinear models either that (outer loop defaults) or an
+        :class:`~repro.core.options.IteratedOptions` wrapping it.  ``None``
+        means all defaults.
+      mesh: optional ``jax.sharding.Mesh``; stacked batches are sharded
+        over ``mesh.shape[batch_axis]`` devices with ``shard_map``.
+      diagnostics: compute ``Solution.cost`` / ``cost_trace`` (default).
+        ``False`` skips the Onsager-Machlup evaluations -- use for hot
+        serving paths that never read them.
+      cache: optional private :class:`ExecutableCache` (default: the
+        module-level cache shared by all estimators).
+    """
+
+    def __init__(self, model: Model, *, method: str = "parallel_rts",
+                 options=None, mesh=None, batch_axis: str = "data",
+                 diagnostics: bool = True,
+                 cache: Optional[ExecutableCache] = None):
+        self._spec = get_method(method)
+        self.model = model
+        self.method = method
+        self.options = self._resolve_options(options)
+        self.mesh = mesh
+        self.batch_axis = batch_axis
+        self.diagnostics = diagnostics
+        self._cache = _CACHE if cache is None else cache
+
+    def _resolve_options(self, options):
+        cls = self._spec.options_cls
+        if isinstance(self.model, NonlinearSDE):
+            if options is None:
+                options = IteratedOptions()
+            elif isinstance(options, cls):
+                options = IteratedOptions(inner=options)
+            elif not isinstance(options, IteratedOptions):
+                raise TypeError(
+                    f"options for nonlinear method {self.method!r} must be "
+                    f"{cls.__name__} or IteratedOptions, got "
+                    f"{type(options).__name__}")
+            inner = options.inner if options.inner is not None else cls()
+            if not isinstance(inner, cls):
+                raise TypeError(
+                    f"IteratedOptions.inner for method {self.method!r} must "
+                    f"be {cls.__name__}, got {type(inner).__name__}")
+            return options.replace(inner=inner)
+        if isinstance(options, IteratedOptions):
+            raise TypeError(
+                "IteratedOptions is for NonlinearSDE models; linear models "
+                f"take {cls.__name__}")
+        if options is None:
+            options = cls()
+        if not isinstance(options, cls):
+            raise TypeError(
+                f"options for method {self.method!r} must be "
+                f"{cls.__name__}, got {type(options).__name__}")
+        return options
+
+    @property
+    def block_size(self) -> int:
+        """Grid-length multiple required by the method (``nsub`` for
+        parallel methods, 1 otherwise) -- the bucketing unit."""
+        o = self.options
+        if isinstance(o, IteratedOptions):
+            o = o.inner
+        return getattr(o, "nsub", 1)
+
+    # -- executable construction -------------------------------------------
+
+    def _check_model(self, problem: Problem) -> None:
+        if problem.model is not self.model:
+            raise ValueError(
+                "problem.model is not this Estimator's model object; build "
+                "the Problem with the same model instance (executables are "
+                "cached per model object)")
+
+    def _prepare(self, problem: Problem):
+        """Fetch/compile the executable for this problem's layout; returns
+        ``(jitted_fn, args)``."""
+        self._check_model(problem)
+        ts, y = problem.ts, problem.y
+        mask, x_init = problem.measurement_mask, problem.x_init
+        stacked = problem.kind == "stacked"
+        if stacked and self.mesh is not None:
+            axis = self.mesh.shape[self.batch_axis]
+            if y.shape[0] % axis:
+                raise ValueError(
+                    f"batch {y.shape[0]} not divisible by mesh axis "
+                    f"{self.batch_axis!r} size {axis}")
+
+        args: List[Any] = [ts, y]
+        axes: List[Optional[int]] = [0 if (stacked and ts.ndim == 2) else None,
+                                     0 if stacked else None]
+        if mask is not None:
+            args.append(mask)
+            axes.append(0 if stacked else None)
+        if x_init is not None:
+            args.append(x_init)
+            if not stacked:
+                axes.append(None)
+            else:
+                # (nx,) / (N+1, nx) are shared, (B, nx) / (B, N+1, nx)
+                # per-record; in the ambiguous B == N+1 rank-2 case the
+                # per-record reading wins (tile to (B, N+1, nx) to force a
+                # shared trajectory).
+                B = y.shape[0]
+                shared = x_init.ndim == 1 or (
+                    x_init.ndim == 2 and x_init.shape[0] != B)
+                axes.append(None if shared else 0)
+
+        has_mask, has_xinit = mask is not None, x_init is not None
+        key_tail = (
+            self.method, self.options, problem.kind, self.batch_axis,
+            has_mask, has_xinit, self.diagnostics,
+            tuple((a.shape, str(a.dtype)) for a in args),
+            tuple(axes))
+        model, spec, options = self.model, self._spec, self.options
+
+        def build():
+            def solve_one(*call_args):
+                it = iter(call_args)
+                t, yy = next(it), next(it)
+                m = next(it) if has_mask else None
+                xi = next(it) if has_xinit else None
+                return _solve_arrays(model, spec, options, t, yy, m, xi,
+                                     diagnostics=self.diagnostics)
+
+            fn = solve_one
+            if stacked:
+                fn = jax.vmap(fn, in_axes=tuple(axes))
+                if self.mesh is not None:
+                    from repro.distributed.sharding import shard_over_batch
+                    fn = shard_over_batch(
+                        fn, self.mesh, self.batch_axis,
+                        tuple(ax == 0 for ax in axes))
+            return jax.jit(fn)
+
+        fn = self._cache.get(model, self.mesh, key_tail, build)
+        return fn, tuple(args)
+
+    # -- public surface -----------------------------------------------------
+
+    def solve(self, problem: Problem):
+        """Solve a :class:`Problem`.
+
+        Returns a :class:`~repro.core.types.Solution` (single/stacked
+        layouts; stacked fields carry a leading batch axis) or a list of
+        per-record ``Solution``\\ s in submission order (ragged layout,
+        each carrying the shared
+        :class:`~repro.core.types.PaddingReport`).
+        """
+        if problem.kind == "ragged":
+            return self._solve_ragged(problem)
+        fn, args = self._prepare(problem)
+        return fn(*args)
+
+    def lower(self, problem: Problem) -> "jax.stages.Lowered":
+        """Ahead-of-time path: the ``jax.stages.Lowered`` for this
+        problem's layout (``.compile()`` it, then call with the problem's
+        arrays).  Ragged problems compose several stacked executables and
+        cannot be lowered as one program -- lower per-bucket stacked
+        problems instead."""
+        if problem.kind == "ragged":
+            raise ValueError(
+                "lower() supports single/stacked problems; a ragged solve "
+                "composes one executable per bucket")
+        fn, args = self._prepare(problem)
+        return fn.lower(*args)
+
+    # -- ragged pad-and-bucket ---------------------------------------------
+
+    def _solve_ragged(self, problem: Problem) -> List[Solution]:
+        self._check_model(problem)
+        nsub = self.block_size
+        lengths = problem.lengths
+        buckets: Dict[int, List[int]] = {}
+        for i, N_i in enumerate(lengths):
+            n_pad = bucket_length(N_i, nsub, problem.bucket_sizes)
+            buckets.setdefault(n_pad, []).append(i)
+
+        x_init = problem.x_init
+        per_record_xi = x_init is not None and x_init.ndim == 2
+
+        out: List[Optional[Solution]] = [None] * len(lengths)
+        infos: List[BucketInfo] = []
+        for n_pad, idxs in sorted(buckets.items()):
+            padded = [pad_record(problem.ts[i], problem.y[i], n_pad)
+                      for i in idxs]
+            B = len(padded)
+            B_pad = next_pow2(B) if problem.pad_batch else B
+            if self.mesh is not None:
+                axis = self.mesh.shape[self.batch_axis]
+                B_pad = -(-B_pad // axis) * axis
+            rows = padded + [padded[0]] * (B_pad - B)   # recycle row 0
+            ts_b = jnp.asarray(np.stack([r[0] for r in rows]))
+            ys_b = jnp.asarray(np.stack([r[1] for r in rows]))
+            mask_b = jnp.asarray(np.stack([r[2] for r in rows]))
+            xi_b = None
+            if per_record_xi:
+                xi_rows = [x_init[i] for i in idxs]
+                xi_b = jnp.asarray(np.stack(
+                    xi_rows + [xi_rows[0]] * (B_pad - B)))
+            elif x_init is not None:
+                xi_b = jnp.asarray(x_init)
+            sub = Problem.stacked(self.model, ts_b, ys_b,
+                                  measurement_mask=mask_b, x_init=xi_b)
+            sol = self.solve(sub)
+            infos.append(BucketInfo(n_pad=n_pad, records=B, batch=B_pad))
+            for row, i in enumerate(idxs):
+                out[i] = slice_solution(sol, row, lengths[i])
+
+        report = PaddingReport(lengths=tuple(lengths), buckets=tuple(infos))
+        return [dataclasses.replace(s, padding=report) for s in out]

@@ -3,25 +3,96 @@
 Continuous-time iterated extended Kalman smoother: linearise (1) about the
 current nominal trajectory, solve the resulting linear-affine MAP problem
 with the sequential or PARALLEL smoother, re-linearise, repeat.  Every
-iteration is parallel-in-time when ``method`` is a parallel solver, which is
-exactly the paper's Fig.-2 experiment (5 iterations on the coordinated-turn
-model).
+iteration is parallel-in-time when the inner method is a parallel solver,
+which is exactly the paper's Fig.-2 experiment (5 iterations on the
+coordinated-turn model).
 
 The default drops the second-order Onsager-Machlup divergence correction
 (as the paper's IEKS does -- for linear-affine subproblems div f~ is
 constant); ``divergence_correction=True`` folds the linearised 1/2 div f
 term in as an extra linear running cost (DESIGN.md S1).
+
+:func:`iterated_solve` is the engine room used by
+:class:`repro.core.Estimator`; the old :func:`iterated_map` entry point
+remains as a deprecation shim around the Estimator surface.
 """
 from __future__ import annotations
 
-from typing import Optional
+import warnings
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .registry import get_solver
-from .sde import NonlinearSDE, grid_lqt_from_nonlinear
+from .sde import (
+    NonlinearSDE,
+    grid_lqt_from_nonlinear,
+    om_cost_nonlinear,
+)
 from .types import MAPSolution
+
+
+def iterated_solve(
+    model: NonlinearSDE,
+    ts: jnp.ndarray,
+    y: jnp.ndarray,
+    solver: Callable,
+    *,
+    iterations: int = 5,
+    divergence_correction: bool = False,
+    x_init: jnp.ndarray | None = None,
+    measurement_mask: Optional[jnp.ndarray] = None,
+    track_costs: bool = True,
+) -> Tuple[MAPSolution, Optional[jnp.ndarray]]:
+    """Continuous-time iterated MAP estimation (paper section 5.2).
+
+    ``solver`` maps a linearised :class:`~repro.core.types.GridLQT` to a
+    :class:`MAPSolution` (method + options already bound).  ``iterations``
+    fixed Gauss-Newton style passes (paper uses 5); the initial nominal
+    trajectory defaults to the constant prior mean.  ``x_init`` may be a
+    full nominal trajectory ``(N+1, nx)`` or a single state ``(nx,)`` that
+    is broadcast along time -- the latter is the batch-friendly form (a
+    per-record warm-start point vmaps over records of any padded length).
+    ``measurement_mask`` (``(N,)`` of 0/1) zeroes masked measurement
+    intervals in every linearisation pass (padding / missing data).
+
+    Returns ``(solution, cost_trace)`` where ``cost_trace[i]`` is the true
+    (nonlinear) Onsager-Machlup cost of the iterate produced by pass
+    ``i+1`` -- the Gauss-Newton descent curve; ``cost_trace[-1]`` is the
+    cost of the returned solution.  ``track_costs=False`` skips the cost
+    evaluations (returning ``(solution, None)``) -- one model f/h sweep
+    plus Q/R inversions saved per iteration.
+    """
+    N = y.shape[0]
+    if x_init is None:
+        x_init = jnp.broadcast_to(model.m0, (N + 1,) + model.m0.shape)
+    elif x_init.ndim == 1:
+        x_init = jnp.broadcast_to(x_init, (N + 1,) + x_init.shape)
+
+    def cost_of(x):
+        return om_cost_nonlinear(
+            model, ts, y, x, divergence_correction=divergence_correction,
+            measurement_mask=measurement_mask)
+
+    def body(xbar, _):
+        grid = grid_lqt_from_nonlinear(
+            model, ts, y, xbar, divergence_correction=divergence_correction,
+            measurement_mask=measurement_mask)
+        sol = solver(grid)
+        return sol.x, (cost_of(sol.x) if track_costs else None)
+
+    # iterations-1 passes inside lax.scan (keeps the compiled graph O(1) in
+    # iteration count), plus one final pass returning the full solution --
+    # ``iterations`` linearise+solve passes total, matching the paper.
+    x_last, costs = jax.lax.scan(body, x_init, None, length=iterations - 1)
+    grid = grid_lqt_from_nonlinear(
+        model, ts, y, x_last, divergence_correction=divergence_correction,
+        measurement_mask=measurement_mask)
+    sol = solver(grid)
+    if not track_costs:
+        return sol, None
+    trace = jnp.concatenate([costs, cost_of(sol.x)[None]], axis=0)
+    return sol, trace
 
 
 def iterated_map(
@@ -36,37 +107,20 @@ def iterated_map(
     divergence_correction: bool = False,
     x_init: jnp.ndarray | None = None,
     measurement_mask: Optional[jnp.ndarray] = None,
-) -> MAPSolution:
-    """Continuous-time iterated MAP estimation (paper section 5.2).
+):
+    """Deprecated shim: use ``Estimator(model, method=..., options=
+    IteratedOptions(...)).solve(Problem.single(...))`` instead."""
+    warnings.warn(
+        "iterated_map is deprecated; use repro.core.Estimator with "
+        "IteratedOptions and Problem.single (see docs/MIGRATION.md)",
+        DeprecationWarning, stacklevel=2)
+    from .estimator import Estimator, Problem, legacy_options
 
-    ``iterations`` fixed Gauss-Newton style passes (paper uses 5); the
-    initial nominal trajectory defaults to the constant prior mean.
-    ``x_init`` may be a full nominal trajectory ``(N+1, nx)`` or a single
-    state ``(nx,)`` that is broadcast along time -- the latter is the
-    batch-friendly form (a per-record warm-start point vmaps over records
-    of any padded length).  ``measurement_mask`` (``(N,)`` of 0/1) zeroes
-    masked measurement intervals in every linearisation pass (padding /
-    missing data).  Returns the MAP solution from the final linearisation.
-    """
-    solver = get_solver(method)
-    N = y.shape[0]
-    if x_init is None:
-        x_init = jnp.broadcast_to(model.m0, (N + 1,) + model.m0.shape)
-    elif x_init.ndim == 1:
-        x_init = jnp.broadcast_to(x_init, (N + 1,) + x_init.shape)
-
-    def body(xbar, _):
-        grid = grid_lqt_from_nonlinear(
-            model, ts, y, xbar, divergence_correction=divergence_correction,
-            measurement_mask=measurement_mask)
-        sol = solver(grid, nsub, mode)
-        return sol.x, None
-
-    # iterations-1 passes inside lax.scan (keeps the compiled graph O(1) in
-    # iteration count), plus one final pass returning the full solution --
-    # ``iterations`` linearise+solve passes total, matching the paper.
-    x_last, _ = jax.lax.scan(body, x_init, None, length=iterations - 1)
-    grid = grid_lqt_from_nonlinear(
-        model, ts, y, x_last, divergence_correction=divergence_correction,
-        measurement_mask=measurement_mask)
-    return solver(grid, nsub, mode)
+    est = Estimator(model, method=method,
+                    options=legacy_options(
+                        model, method, nsub=nsub, mode=mode,
+                        iterations=iterations,
+                        divergence_correction=divergence_correction))
+    return est.solve(Problem.single(model, ts, y,
+                                    measurement_mask=measurement_mask,
+                                    x_init=x_init))

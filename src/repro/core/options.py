@@ -1,0 +1,130 @@
+"""Solver-owned option dataclasses for the unified estimation surface.
+
+Every registered method declares the options IT understands as a frozen
+dataclass registered alongside the solver
+(:func:`repro.core.registry.register_method`), so knobs stop being
+universal keyword soup on every entry point:
+
+* :class:`SequentialOptions` -- ``mode`` only (sequential smoothers have no
+  block structure);
+* :class:`ParallelOptions` -- ``mode`` + ``nsub`` (blocks of ``nsub``
+  substeps feed the associative scan);
+* :class:`TwoFilterOptions` -- parallel options + the two-filter-specific
+  ``block0_fill`` / ``tf_fill`` / ``jitter`` knobs of
+  :func:`repro.core.parallel.parallel_two_filter`;
+* :class:`IteratedOptions` -- the iterated-linearisation (nonlinear) layer:
+  ``iterations`` / ``divergence_correction`` plus the ``inner`` linear
+  options forwarded to the method that solves each linearised subproblem.
+
+Unknown option names fail at CONSTRUCTION time (``TypeError`` from the
+dataclass ``__init__``); value errors (bad ``mode``, non-positive ``nsub``)
+fail in ``__post_init__`` -- never deep inside a trace.  All option classes
+are frozen and hashable, so an options instance is part of the executable
+cache key of :class:`repro.core.estimator.Estimator`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+MODES = ("euler", "rk4", "discrete")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverOptions:
+    """Base options shared by every grid solver.
+
+    ``mode`` selects the element discretisation: ``"euler"`` / ``"rk4"``
+    integrate the paper's ODEs (43) literally; ``"discrete"`` composes
+    exact substep elements so parallel == sequential to round-off.
+    """
+
+    mode: str = "euler"
+
+    def __post_init__(self) -> None:
+        if self.mode not in MODES:
+            raise ValueError(
+                f"mode must be one of {MODES}, got {self.mode!r}")
+
+    @classmethod
+    def from_legacy(cls, **kwargs) -> "SolverOptions":
+        """Build options from the legacy kwarg soup, keeping only the
+        fields THIS options class declares (shim support)."""
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in kwargs.items()
+                      if k in names and v is not None})
+
+    def replace(self, **changes) -> "SolverOptions":
+        return dataclasses.replace(self, **changes)
+
+
+@dataclasses.dataclass(frozen=True)
+class SequentialOptions(SolverOptions):
+    """Options of the sequential RTS / two-filter smoothers."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelOptions(SolverOptions):
+    """Options of the parallel (associative-scan) smoothers.
+
+    ``nsub`` is the number of substeps per scan block (paper: n = 10); the
+    grid length N must be a multiple of it (the ragged/bucketed paths
+    guarantee this by padding).
+    """
+
+    nsub: int = 10
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        if not isinstance(self.nsub, int) or self.nsub < 1:
+            raise ValueError(f"nsub must be a positive int, got {self.nsub!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoFilterOptions(ParallelOptions):
+    """Parallel two-filter smoother options (see
+    :func:`repro.core.parallel.parallel_two_filter` for semantics)."""
+
+    block0_fill: str = "affine"
+    tf_fill: str = "combine"
+    jitter: float = 1e-9
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        if self.block0_fill not in ("affine", "min_initial"):
+            raise ValueError(
+                f"block0_fill must be 'affine' or 'min_initial', "
+                f"got {self.block0_fill!r}")
+        if self.tf_fill not in ("combine", "hjb_euler"):
+            raise ValueError(
+                f"tf_fill must be 'combine' or 'hjb_euler', "
+                f"got {self.tf_fill!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class IteratedOptions:
+    """Options of the iterated-linearisation layer (nonlinear models only).
+
+    ``inner`` carries the options of the method solving each linearised
+    subproblem; ``None`` means the method's defaults.  Passing a bare
+    method-options instance to :class:`~repro.core.estimator.Estimator`
+    for a nonlinear model is equivalent to
+    ``IteratedOptions(inner=that_instance)``.
+    """
+
+    iterations: int = 5
+    divergence_correction: bool = False
+    inner: Optional[SolverOptions] = None
+
+    def __post_init__(self) -> None:
+        if not isinstance(self.iterations, int) or self.iterations < 1:
+            raise ValueError(
+                f"iterations must be a positive int, got {self.iterations!r}")
+        if self.inner is not None and not isinstance(self.inner,
+                                                     SolverOptions):
+            raise TypeError(
+                f"inner must be a SolverOptions instance, got "
+                f"{type(self.inner).__name__}")
+
+    def replace(self, **changes) -> "IteratedOptions":
+        return dataclasses.replace(self, **changes)

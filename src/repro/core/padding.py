@@ -1,0 +1,104 @@
+"""Pad-and-bucket utilities for ragged record lengths.
+
+Records of unequal length are padded to a small set of bucket lengths so a
+handful of compiled executables serves any mix of lengths.  Padding is
+EXACT, not approximate: a padded tail beyond ``t_f`` carries
+``measurement_mask = 0`` so it contributes no measurement cost, and the
+dynamics cost of the tail is zero at the optimum (the extension follows
+the drift), hence the MAP estimate restricted to the real window is
+unchanged (see :func:`repro.core.sde.build_grid_lqt`); tests verify
+padded == unpadded to round-off.
+
+Used by :meth:`repro.core.Estimator.solve` on ragged
+:class:`~repro.core.Problem`\\ s and by
+:class:`repro.serving.TrajectoryEngine`.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .types import MAPSolution, Solution
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+def bucket_length(
+    N: int, nsub: int, bucket_sizes: Optional[Sequence[int]] = None,
+) -> int:
+    """Padded interval count for a record of ``N`` intervals.
+
+    Default rule: the smallest power-of-two number of ``nsub``-substep
+    blocks that fits, i.e. ``nsub * 2^ceil(log2(N / nsub))`` -- always a
+    multiple of ``nsub`` (required by the parallel methods' blocking) and
+    at most ~2x overhead.  Explicit ``bucket_sizes`` (multiples of
+    ``nsub``) override the rule; the smallest fitting bucket is used.
+    """
+    if bucket_sizes is not None:
+        for size in bucket_sizes:
+            if size % nsub:
+                raise ValueError(
+                    f"bucket size {size} not a multiple of nsub={nsub}")
+        fitting = [s for s in bucket_sizes if s >= N]
+        if not fitting:
+            raise ValueError(
+                f"record length {N} exceeds largest bucket "
+                f"{max(bucket_sizes)}")
+        return min(fitting)
+    blocks = -(-N // nsub)          # ceil
+    return nsub * next_pow2(blocks)
+
+
+def pad_record(
+    ts: np.ndarray, y: np.ndarray, n_pad: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad one record to ``n_pad`` intervals.
+
+    The time grid is extended past ``t_f`` with the final step size, padded
+    measurements are zeros, and the returned mask marks them as carrying no
+    information.  Returns ``(ts_pad (n_pad+1,), y_pad (n_pad, ny),
+    mask (n_pad,))``.
+    """
+    ts = np.asarray(ts)
+    y = np.asarray(y)
+    N = y.shape[0]
+    if N < 1:
+        raise ValueError("record must have at least one interval")
+    if ts.shape[0] != N + 1:
+        raise ValueError(f"ts has {ts.shape[0]} points for {N} intervals")
+    if n_pad < N:
+        raise ValueError(f"n_pad={n_pad} < record length {N}")
+    extra = n_pad - N
+    dt_last = ts[-1] - ts[-2]
+    ts_pad = np.concatenate(
+        [ts, ts[-1] + dt_last * np.arange(1, extra + 1, dtype=ts.dtype)])
+    y_pad = np.concatenate(
+        [y, np.zeros((extra,) + y.shape[1:], dtype=y.dtype)], axis=0)
+    mask = np.concatenate(
+        [np.ones(N, dtype=y.dtype), np.zeros(extra, dtype=y.dtype)])
+    return ts_pad, y_pad, mask
+
+
+def slice_solution(
+    sol: Union[Solution, MAPSolution], row: int, N: int,
+) -> Union[Solution, MAPSolution]:
+    """Extract record ``row`` from a batched solution, un-padded to ``N``
+    intervals (``N+1`` trajectory points).
+
+    Time-indexed fields (``x``/``S``/``v``/``cov``) are sliced; per-record
+    diagnostics of a :class:`~repro.core.Solution` (``cost``,
+    ``cost_trace``) keep the whole row.
+    """
+    take = lambda a: None if a is None else a[row, :N + 1]
+    if isinstance(sol, Solution):
+        per_record = lambda a: None if a is None else a[row]
+        return Solution(
+            x=take(sol.x), S=take(sol.S), v=take(sol.v), cov=take(sol.cov),
+            cost=per_record(sol.cost),
+            cost_trace=per_record(sol.cost_trace),
+            padding=sol.padding)
+    return MAPSolution(x=take(sol.x), S=take(sol.S), v=take(sol.v),
+                       cov=take(sol.cov))

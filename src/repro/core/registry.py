@@ -1,58 +1,122 @@
 """Method registry: one dispatch table for every MAP solver backend.
 
-``api.map_estimate`` and ``nonlinear.iterated_map`` used to carry parallel
-if-chains over method names; both now dispatch through this table, and new
-backends (e.g. a kernel-backed combine, a distributed-scan variant) plug in
-with :func:`register_method` without touching the call sites.
+Each entry is a :class:`MethodSpec` pairing the solver callable with the
+:class:`~repro.core.options.SolverOptions` dataclass it owns, so
+method-specific knobs (``nsub``, ``block0_fill``, ...) live with the
+solver instead of widening every public signature.  New backends (e.g. a
+kernel-backed combine, a distributed-scan variant) plug in with
+:func:`register_method` without touching any call site:
 
-Every solver is normalised to the uniform signature
+    registry.register_method("my_method", solver, MyOptions)
 
-    solver(grid: GridLQT, nsub: int, mode: str) -> MAPSolution
-
-(sequential methods simply ignore ``nsub``).
+where ``solver(grid: GridLQT, options: MyOptions) -> MAPSolution``.  The
+legacy ``solver(grid, nsub, mode)`` signature (pre-options registrations)
+is still accepted when ``options_cls`` is omitted; it is adapted to the
+canonical form and assigned :class:`~repro.core.options.ParallelOptions`.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, NamedTuple, Optional, Tuple, Type
 
+from .options import (
+    ParallelOptions,
+    SequentialOptions,
+    SolverOptions,
+    TwoFilterOptions,
+)
 from .parallel import parallel_rts, parallel_two_filter
 from .sequential import sequential_rts, sequential_two_filter
 from .types import GridLQT, MAPSolution
 
-Solver = Callable[[GridLQT, int, str], MAPSolution]
-
-_SOLVERS: Dict[str, Solver] = {}
+Solver = Callable[[GridLQT, SolverOptions], MAPSolution]
 
 
-def register_method(name: str, solver: Solver, *, overwrite: bool = False) -> None:
+class MethodSpec(NamedTuple):
+    """A registered solver backend: name + canonical solver + its options."""
+
+    name: str
+    solver: Solver
+    options_cls: Type[SolverOptions]
+
+    def default_options(self) -> SolverOptions:
+        return self.options_cls()
+
+
+_METHODS: Dict[str, MethodSpec] = {}
+
+
+def register_method(
+    name: str,
+    solver: Callable,
+    options_cls: Optional[Type[SolverOptions]] = None,
+    *,
+    overwrite: bool = False,
+) -> None:
     """Register a solver backend under ``name``.
 
-    ``solver`` must accept ``(grid, nsub, mode)`` and return a
-    :class:`~repro.core.types.MAPSolution`.
+    ``solver`` must accept ``(grid, options)`` -- with ``options`` an
+    instance of ``options_cls`` -- and return a
+    :class:`~repro.core.types.MAPSolution`.  Omitting ``options_cls``
+    registers a legacy ``(grid, nsub, mode)`` solver, adapted in place.
     """
-    if name in _SOLVERS and not overwrite:
+    if options_cls is None:
+        legacy = solver
+
+        def solver(grid, options, _legacy=legacy):  # noqa: F811
+            return _legacy(grid, getattr(options, "nsub", 1), options.mode)
+
+        options_cls = ParallelOptions
+    elif not (isinstance(options_cls, type)
+              and issubclass(options_cls, SolverOptions)):
+        raise TypeError(
+            f"options_cls must be a SolverOptions subclass, got "
+            f"{options_cls!r}")
+    if name in _METHODS and not overwrite:
         raise ValueError(f"method {name!r} already registered")
-    _SOLVERS[name] = solver
+    _METHODS[name] = MethodSpec(name, solver, options_cls)
 
 
-def get_solver(name: str) -> Solver:
+def get_method(name: str) -> MethodSpec:
     try:
-        return _SOLVERS[name]
+        return _METHODS[name]
     except KeyError:
         raise ValueError(
             f"method must be one of {method_names()}, got {name!r}"
         ) from None
 
 
+def get_solver(name: str) -> Callable:
+    """Back-compat accessor: a ``(grid, nsub, mode)`` adapter around the
+    registered solver (fields the method's options do not declare are
+    dropped)."""
+    spec = get_method(name)
+
+    def solver(grid, nsub, mode):
+        return spec.solver(grid,
+                           spec.options_cls.from_legacy(nsub=nsub, mode=mode))
+
+    return solver
+
+
 def method_names() -> Tuple[str, ...]:
-    return tuple(_SOLVERS)
+    return tuple(_METHODS)
 
 
-# parallel solvers already have the registry signature; the sequential
-# ones take no nsub and need the dropping adapter.
-register_method("parallel_rts", parallel_rts)
-register_method("parallel_two_filter", parallel_two_filter)
-register_method("sequential_rts",
-                lambda grid, nsub, mode: sequential_rts(grid, mode))
-register_method("sequential_two_filter",
-                lambda grid, nsub, mode: sequential_two_filter(grid, mode))
+register_method(
+    "parallel_rts",
+    lambda grid, o: parallel_rts(grid, o.nsub, o.mode),
+    ParallelOptions)
+register_method(
+    "parallel_two_filter",
+    lambda grid, o: parallel_two_filter(
+        grid, o.nsub, o.mode, jitter=o.jitter,
+        block0_fill=o.block0_fill, tf_fill=o.tf_fill),
+    TwoFilterOptions)
+register_method(
+    "sequential_rts",
+    lambda grid, o: sequential_rts(grid, o.mode),
+    SequentialOptions)
+register_method(
+    "sequential_two_filter",
+    lambda grid, o: sequential_two_filter(grid, o.mode),
+    SequentialOptions)

@@ -266,12 +266,15 @@ def simulate_nonlinear(model: NonlinearSDE, ts: Array, key: jax.Array):
     return xs, y
 
 
-def om_cost_linear(model: LinearSDE, ts: Array, y: Array, x: Array) -> Array:
+def om_cost_linear(model: LinearSDE, ts: Array, y: Array, x: Array,
+                   measurement_mask: Optional[Array] = None) -> Array:
     """Discretised Onsager-Machlup / minimum-energy cost of a trajectory.
 
     Uses the backward-Euler quadrature matching the reversed-time solvers
     (drift and measurement evaluated at ``x_{k+1}``); the divergence term is
     constant for linear models and omitted (it cannot change the argmin).
+    ``measurement_mask`` (``(N,)`` of 0/1) zeroes the measurement term on
+    masked intervals, matching the solvers' missing-data semantics.
     """
     F, c, H, r, Q, R = model.grids(ts)
     dt = jnp.diff(ts)
@@ -283,14 +286,17 @@ def om_cost_linear(model: LinearSDE, ts: Array, y: Array, x: Array) -> Array:
     cost = cost + 0.5 * jnp.sum(
         dt * jnp.einsum("ki,kij,kj->k", resid, jnp.linalg.inv(Q), resid))
     innov = y - (jnp.einsum("kij,kj->ki", H, xr) + r)
-    cost = cost + 0.5 * jnp.sum(
-        dt * jnp.einsum("ki,kij,kj->k", innov, jnp.linalg.inv(R), innov))
+    meas = jnp.einsum("ki,kij,kj->k", innov, jnp.linalg.inv(R), innov)
+    if measurement_mask is not None:
+        meas = meas * measurement_mask
+    cost = cost + 0.5 * jnp.sum(dt * meas)
     return cost
 
 
 def om_cost_nonlinear(
     model: NonlinearSDE, ts: Array, y: Array, x: Array,
     divergence_correction: bool = False,
+    measurement_mask: Optional[Array] = None,
 ) -> Array:
     dt = jnp.diff(ts)
     tl = ts[:-1]
@@ -304,10 +310,42 @@ def om_cost_nonlinear(
     cost = cost + 0.5 * jnp.sum(
         dt * jnp.einsum("ki,kij,kj->k", resid, jnp.linalg.inv(Q), resid))
     innov = y - jax.vmap(model.h)(xr, tl)
-    cost = cost + 0.5 * jnp.sum(
-        dt * jnp.einsum("ki,kij,kj->k", innov, jnp.linalg.inv(R), innov))
+    meas = jnp.einsum("ki,kij,kj->k", innov, jnp.linalg.inv(R), innov)
+    if measurement_mask is not None:
+        meas = meas * measurement_mask
+    cost = cost + 0.5 * jnp.sum(dt * meas)
     if divergence_correction:
         def div_f(xk, t):
             return jnp.trace(jax.jacfwd(model.f, argnums=0)(xk, t))
         cost = cost + 0.5 * jnp.sum(dt * jax.vmap(div_f)(xr, tl))
     return cost
+
+
+def om_cost_grid(grid: GridLQT, x: Array) -> Array:
+    """Onsager-Machlup cost of trajectory ``x`` under a built grid problem.
+
+    ``x`` is in ORIGINAL time order (``(N+1, nx)``); the quadrature is the
+    reversed-time backward-Euler one the solvers minimise, so this is the
+    objective value of a :class:`~repro.core.types.MAPSolution`.  Any
+    measurement mask is already folded into ``grid.Rinv`` (masked
+    intervals cost nothing).  ``Q`` may be singular (``Q = L W L^T``):
+    the dynamics term uses the pseudo-inverse, i.e. the minimum-energy
+    cost over noise directions the model actually drives -- identical to
+    ``inv(Q)`` whenever ``Q`` is invertible.
+    """
+    phi = jnp.flip(x, axis=0)                     # phi_j = x_{N-j}
+    dt = grid.dt
+    resid = (phi[1:] - phi[:-1]) / dt[:, None] - (
+        jnp.einsum("kij,kj->ki", grid.F, phi[:-1]) + grid.c)
+    Qpinv = jnp.linalg.pinv(grid.Q)
+    cost = 0.5 * jnp.sum(
+        dt * jnp.einsum("ki,kij,kj->k", resid, Qpinv, resid))
+    innov = grid.y - (jnp.einsum("kij,kj->ki", grid.H, phi[:-1]) + grid.r)
+    cost = cost + 0.5 * jnp.sum(
+        dt * jnp.einsum("ki,kij,kj->k", innov, grid.Rinv, innov))
+    if grid.lin is not None:
+        cost = cost + jnp.sum(dt * jnp.einsum("ki,ki->k", grid.lin, phi[:-1]))
+    # terminal (reversed) boundary = the initial prior N(m0, P0)
+    m0 = jnp.linalg.solve(grid.S_T, grid.v_T)
+    d0 = phi[-1] - m0
+    return cost + 0.5 * d0 @ grid.S_T @ d0

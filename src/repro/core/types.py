@@ -20,8 +20,10 @@ pure functions over them so ``vmap``/``pjit``/``shard_map`` compose freely.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 
@@ -109,3 +111,86 @@ class MAPSolution(NamedTuple):
     S: jnp.ndarray            # (N+1, nx, nx)
     v: jnp.ndarray            # (N+1, nx)
     cov: Optional[jnp.ndarray] = None  # (N+1, nx, nx) smoothing covariance
+
+
+# ---------------------------------------------------------------------------
+# Public solution type of the unified Estimator/Problem surface
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketInfo:
+    """One pad-and-bucket executable of a ragged solve."""
+
+    n_pad: int     # padded interval count every record in the bucket shares
+    records: int   # real records solved in this bucket
+    batch: int     # compiled batch rows (>= records after batch padding)
+
+    @property
+    def recycled_rows(self) -> int:
+        return self.batch - self.records
+
+
+@dataclasses.dataclass(frozen=True)
+class PaddingReport:
+    """Static bucket/padding accounting attached to ragged solutions.
+
+    ``lengths`` are the original record interval counts in submission
+    order; ``buckets`` one entry per compiled executable.  Utilisation
+    ratios quantify the pad-and-bucket overhead (1.0 = no padding).
+    """
+
+    lengths: Tuple[int, ...]
+    buckets: Tuple[BucketInfo, ...]
+
+    @property
+    def records(self) -> int:
+        return len(self.lengths)
+
+    @property
+    def real_intervals(self) -> int:
+        return sum(self.lengths)
+
+    @property
+    def solved_intervals(self) -> int:
+        return sum(b.n_pad * b.batch for b in self.buckets)
+
+    @property
+    def interval_utilisation(self) -> float:
+        solved = self.solved_intervals
+        return self.real_intervals / solved if solved else 1.0
+
+    @property
+    def row_utilisation(self) -> float:
+        rows = sum(b.batch for b in self.buckets)
+        return self.records / rows if rows else 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Solution:
+    """Result of :meth:`repro.core.Estimator.solve`: the MAP estimate of
+    :class:`MAPSolution` plus diagnostics.
+
+    Array fields may carry a leading batch axis (stacked problems).
+    ``cost`` is the discretised Onsager-Machlup cost of ``x`` (the
+    objective the MAP estimate minimises); for nonlinear solves
+    ``cost_trace`` holds the cost after each linearise-and-solve pass
+    (``cost == cost_trace[..., -1]``), the Gauss-Newton descent curve of
+    the iterated smoother.  ``padding`` (static metadata) is only present
+    on solutions of ragged problems.
+    """
+
+    x: jnp.ndarray                         # (..., N+1, nx) MAP trajectory
+    S: jnp.ndarray                         # (..., N+1, nx, nx) filter info
+    v: jnp.ndarray                         # (..., N+1, nx)
+    cov: Optional[jnp.ndarray] = None      # (..., N+1, nx, nx) smoothing cov
+    cost: Optional[jnp.ndarray] = None     # (...,) Onsager-Machlup cost
+    cost_trace: Optional[jnp.ndarray] = None  # (..., iterations)
+    padding: Optional[PaddingReport] = None   # static; ragged solves only
+
+
+jax.tree_util.register_dataclass(
+    Solution,
+    data_fields=["x", "S", "v", "cov", "cost", "cost_trace"],
+    meta_fields=["padding"],
+)

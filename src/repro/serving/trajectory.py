@@ -1,15 +1,16 @@
 """Trajectory-estimation serving engine: MAP solves as a batched service.
 
 ``TrajectoryEngine`` is the estimation-workload sibling of
-:class:`~repro.serving.engine.ServeEngine`: instead of LM decode steps it
-serves :func:`~repro.core.map_estimate` requests.  The same production
-tricks apply:
+:class:`~repro.serving.engine.ServeEngine`: it serves
+:class:`~repro.core.Problem` solves through one
+:class:`~repro.core.Estimator`.  The production tricks:
 
 * **fixed-batch padding** -- every wave is exactly ``batch`` rows, so each
   bucket length compiles ONE executable, reused forever (the executable
-  cache lives in :mod:`repro.core.batching`);
+  cache lives in :mod:`repro.core.estimator`);
 * **pad-and-bucket** -- ragged record lengths are padded to power-of-two
-  block counts with masked measurements (exact, see ``batching``);
+  block counts with masked measurements (exact, see
+  :mod:`repro.core.padding`);
 * **row recycling / continuous batching** -- short waves are topped up by
   recycling a live row, and the queue is drained in FIFO waves grouped by
   bucket so one submit/collect cycle serves any mix of lengths;
@@ -18,26 +19,30 @@ tricks apply:
   sharded over the mesh's data axis, spreading requests across devices.
 
 API: ``submit(ts, y) -> ticket``; ``step()`` solves one wave; ``collect()``
-pops finished ``(ticket, MAPSolution)`` pairs; ``estimate(records)`` is the
+pops finished ``(ticket, Solution)`` pairs; ``estimate(records)`` is the
 synchronous convenience wrapper.
+
+The solver configuration is the Estimator's: pass ``method=`` plus the
+method's options dataclass (e.g. ``ParallelOptions(nsub=10,
+mode="discrete")``, or ``IteratedOptions(...)`` for nonlinear models).
+The pre-redesign kwargs (``nsub``/``mode``/``iterations``/
+``divergence_correction``) are still accepted with a
+``DeprecationWarning``.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import warnings
 from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.batching import (
-    bucket_length,
-    map_estimate_batched,
-    pad_record,
-    slice_solution,
-)
+from repro.core.estimator import Estimator, Problem, legacy_options
+from repro.core.padding import bucket_length, pad_record, slice_solution
 from repro.core.sde import LinearSDE, NonlinearSDE
-from repro.core.types import MAPSolution
+from repro.core.types import Solution
 
 
 @dataclasses.dataclass
@@ -55,10 +60,11 @@ class TrajectoryEngine:
       model: shared :class:`LinearSDE` / :class:`NonlinearSDE`.
       batch: fixed wave size (compiled batch).  With a mesh it must be
         divisible by the mesh's ``batch_axis`` size.
-      method / nsub / mode / iterations / divergence_correction: forwarded
-        to :func:`~repro.core.map_estimate` for every request.
+      method: registered method name; ``options`` its options dataclass
+        (``None`` = method defaults) -- both forwarded to the underlying
+        :class:`~repro.core.Estimator`.
       bucket_sizes: optional explicit padded-length buckets (multiples of
-        ``nsub``); default is power-of-two block counts.
+        the method's block size); default is power-of-two block counts.
       mesh: optional ``jax.sharding.Mesh`` for batch-axis sharding.
     """
 
@@ -68,33 +74,41 @@ class TrajectoryEngine:
         *,
         batch: int = 8,
         method: str = "parallel_rts",
-        nsub: int = 10,
-        mode: str = "euler",
-        iterations: int = 5,
-        divergence_correction: bool = False,
+        options=None,
         bucket_sizes: Optional[Sequence[int]] = None,
         mesh=None,
         batch_axis: str = "data",
+        **legacy,
     ):
+        if legacy:
+            allowed = {"nsub", "mode", "iterations", "divergence_correction"}
+            unknown = set(legacy) - allowed
+            if unknown:
+                raise TypeError(
+                    f"unexpected keyword arguments: {sorted(unknown)}")
+            if options is not None:
+                raise TypeError(
+                    "pass either options=... or the legacy kwargs "
+                    f"{sorted(legacy)}, not both")
+            warnings.warn(
+                f"TrajectoryEngine kwargs {sorted(legacy)} are deprecated; "
+                "pass the method's options dataclass via options= "
+                "(see docs/MIGRATION.md)", DeprecationWarning, stacklevel=2)
+            options = legacy_options(model, method, **legacy)
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
         if mesh is not None and batch % mesh.shape[batch_axis]:
             raise ValueError(
                 f"batch {batch} not divisible by mesh axis "
                 f"{batch_axis!r} size {mesh.shape[batch_axis]}")
+        self.estimator = Estimator(model, method=method, options=options,
+                                   mesh=mesh, batch_axis=batch_axis)
         self.model = model
         self.batch = batch
-        self.method = method
-        self.nsub = nsub
-        self.mode = mode
-        self.iterations = iterations
-        self.divergence_correction = divergence_correction
         self.bucket_sizes = bucket_sizes
-        self.mesh = mesh
-        self.batch_axis = batch_axis
 
         self._queue: Deque[_Pending] = collections.deque()
-        self._done: Dict[int, MAPSolution] = {}
+        self._done: Dict[int, Solution] = {}
         self._next_ticket = 0
         self.waves = 0            # compiled-batch solves issued
         self.recycled_rows = 0    # padding rows recycled into short waves
@@ -113,14 +127,15 @@ class TrajectoryEngine:
                 f"ts must be (N+1,) = {(y.shape[0] + 1,)}, got {ts.shape}")
         ticket = self._next_ticket
         self._next_ticket += 1
-        n_pad = bucket_length(y.shape[0], self.nsub, self.bucket_sizes)
+        n_pad = bucket_length(y.shape[0], self.estimator.block_size,
+                              self.bucket_sizes)
         self._queue.append(_Pending(ticket, ts, y, n_pad))
         return ticket
 
     def pending(self) -> int:
         return len(self._queue)
 
-    def collect(self) -> List[Tuple[int, MAPSolution]]:
+    def collect(self) -> List[Tuple[int, Solution]]:
         """Pop all finished (ticket, solution) pairs, ticket order."""
         out = sorted(self._done.items())
         self._done.clear()
@@ -159,12 +174,9 @@ class TrajectoryEngine:
         ts_b = jnp.asarray(np.stack([r[0] for r in rows]))
         ys_b = jnp.asarray(np.stack([r[1] for r in rows]))
         mask_b = jnp.asarray(np.stack([r[2] for r in rows]))
-        sol = map_estimate_batched(
-            self.model, ts_b, ys_b, method=self.method, nsub=self.nsub,
-            mode=self.mode, iterations=self.iterations,
-            divergence_correction=self.divergence_correction,
-            measurement_mask=mask_b, mesh=self.mesh,
-            batch_axis=self.batch_axis)
+        sol = self.estimator.solve(
+            Problem.stacked(self.model, ts_b, ys_b,
+                            measurement_mask=mask_b))
         self.waves += 1
         for row, req in enumerate(wave):
             self._done[req.ticket] = slice_solution(sol, row, req.y.shape[0])
@@ -181,7 +193,7 @@ class TrajectoryEngine:
 
     def estimate(
         self, records: Sequence[Tuple[np.ndarray, np.ndarray]],
-    ) -> List[MAPSolution]:
+    ) -> List[Solution]:
         """Submit ``(ts, y)`` records, drain, return solutions in order."""
         tickets = [self.submit(ts, y) for ts, y in records]
         self.run()

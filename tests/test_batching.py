@@ -1,6 +1,7 @@
-"""Batched multi-trajectory estimation: batched == looped ``map_estimate``
-(linear + nonlinear), exact length-padding, ragged bucketing, and the
-jit-executable cache."""
+"""Batched multi-trajectory estimation through the unified surface:
+stacked == looped single solves (linear + nonlinear), exact
+length-padding, ragged bucketing + padding report, and the jit-executable
+cache."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,11 +9,12 @@ import pytest
 
 from helpers import coordinated_turn, wiener_velocity
 from repro.core import (
+    Estimator,
+    IteratedOptions,
+    Problem,
     bucket_length,
     cache_stats,
-    map_estimate,
-    map_estimate_batched,
-    map_estimate_ragged,
+    get_method,
     pad_record,
     simulate_linear,
     simulate_nonlinear,
@@ -20,6 +22,10 @@ from repro.core import (
 )
 
 NSUB = 5
+
+
+def _options(method, **kw):
+    return get_method(method).options_cls.from_legacy(**kw)
 
 
 def _linear_batch(B=3, T=4, seed=0):
@@ -40,30 +46,37 @@ def _nonlinear_batch(B=3, T=4, seed=10):
 
 
 @pytest.mark.parametrize("method", ["parallel_rts", "sequential_rts"])
-def test_linear_batched_matches_loop(method):
+def test_linear_stacked_matches_loop(method):
     model, ts, ys = _linear_batch()
-    sol = map_estimate_batched(model, ts, ys, method=method, nsub=NSUB,
-                               mode="discrete")
+    est = Estimator(model, method=method,
+                    options=_options(method, nsub=NSUB, mode="discrete"))
+    sol = est.solve(Problem.stacked(model, ts, ys))
     assert sol.x.shape == (ys.shape[0], ys.shape[1] + 1, model.nx)
+    assert sol.cost.shape == (ys.shape[0],)
     for i in range(ys.shape[0]):
-        ref = map_estimate(model, ts, ys[i], method=method, nsub=NSUB,
-                           mode="discrete")
+        ref = est.solve(Problem.single(model, ts, ys[i]))
         np.testing.assert_allclose(sol.x[i], ref.x, atol=1e-6, rtol=0)
         np.testing.assert_allclose(sol.S[i], ref.S, atol=1e-6, rtol=0)
+        np.testing.assert_allclose(sol.cost[i], ref.cost, atol=1e-6, rtol=0)
 
 
 @pytest.mark.parametrize("method", ["parallel_rts", "sequential_rts"])
-def test_nonlinear_batched_matches_loop(method):
+def test_nonlinear_stacked_matches_loop(method):
     model, ts, ys = _nonlinear_batch()
-    sol = map_estimate_batched(model, ts, ys, method=method, nsub=NSUB,
-                               mode="euler", iterations=3)
+    est = Estimator(
+        model, method=method,
+        options=IteratedOptions(
+            iterations=3, inner=_options(method, nsub=NSUB, mode="euler")))
+    sol = est.solve(Problem.stacked(model, ts, ys))
+    assert sol.cost_trace.shape == (ys.shape[0], 3)
     for i in range(ys.shape[0]):
-        ref = map_estimate(model, ts, ys[i], method=method, nsub=NSUB,
-                           mode="euler", iterations=3)
+        ref = est.solve(Problem.single(model, ts, ys[i]))
         np.testing.assert_allclose(sol.x[i], ref.x, atol=1e-6, rtol=0)
+        np.testing.assert_allclose(sol.cost_trace[i], ref.cost_trace,
+                                   atol=1e-6, rtol=0)
 
 
-def test_batched_per_record_time_grids():
+def test_stacked_per_record_time_grids():
     """ts may be (B, N+1): records sharing N but not the grid itself."""
     model = wiener_velocity()
     N = 4 * NSUB
@@ -71,11 +84,12 @@ def test_batched_per_record_time_grids():
     ys = jnp.stack([simulate_linear(model, ts_b[i],
                                     jax.random.PRNGKey(20 + i))[1]
                     for i in range(2)])
-    sol = map_estimate_batched(model, ts_b, ys, method="parallel_rts",
-                               nsub=NSUB, mode="discrete")
+    est = Estimator(model, method="parallel_rts",
+                    options=_options("parallel_rts", nsub=NSUB,
+                                     mode="discrete"))
+    sol = est.solve(Problem.stacked(model, ts_b, ys))
     for i in range(2):
-        ref = map_estimate(model, ts_b[i], ys[i], method="parallel_rts",
-                           nsub=NSUB, mode="discrete")
+        ref = est.solve(Problem.single(model, ts_b[i], ys[i]))
         np.testing.assert_allclose(sol.x[i], ref.x, atol=1e-8, rtol=0)
 
 
@@ -85,11 +99,13 @@ def test_masked_padding_is_exact():
     N = ys.shape[1]
     ts_p, y_p, mask = pad_record(np.asarray(ts), np.asarray(ys[0]),
                                  N + 3 * NSUB)
-    ref = map_estimate(model, ts, ys[0], method="parallel_rts", nsub=NSUB,
-                       mode="discrete")
-    sol = map_estimate(model, jnp.asarray(ts_p), jnp.asarray(y_p),
-                       method="parallel_rts", nsub=NSUB, mode="discrete",
-                       measurement_mask=jnp.asarray(mask))
+    est = Estimator(model, method="parallel_rts",
+                    options=_options("parallel_rts", nsub=NSUB,
+                                     mode="discrete"))
+    ref = est.solve(Problem.single(model, ts, ys[0]))
+    sol = est.solve(Problem.single(
+        model, jnp.asarray(ts_p), jnp.asarray(y_p),
+        measurement_mask=jnp.asarray(mask)))
     np.testing.assert_allclose(sol.x[:N + 1], ref.x, atol=1e-9, rtol=0)
     np.testing.assert_allclose(sol.S[:N + 1], ref.S, atol=1e-9, rtol=0)
 
@@ -125,62 +141,83 @@ def test_ragged_matches_individual_solves():
         ts_i = time_grid(0.0, N / 20.0, N)
         _, y_i = simulate_linear(model, ts_i, jax.random.PRNGKey(30 + i))
         records.append((np.asarray(ts_i), np.asarray(y_i)))
-    sols = map_estimate_ragged(model, records, method="parallel_rts",
-                               nsub=NSUB, mode="discrete")
+    est = Estimator(model, method="parallel_rts",
+                    options=_options("parallel_rts", nsub=NSUB,
+                                     mode="discrete"))
+    sols = est.solve(Problem.ragged(model, records))
     assert [s.x.shape[0] for s in sols] == [n + 1 for n in lengths]
+    seq = Estimator(model, method="sequential_rts",
+                    options=_options("sequential_rts", mode="discrete"))
     for (ts_i, y_i), sol in zip(records, sols):
         # reference: the nsub-free sequential solver on the UNPADDED record
         # (12 and 35 are not multiples of nsub -- only bucketing makes them
         # parallel-solvable); discrete mode is exact, so agreement is tight.
-        ref = map_estimate(model, jnp.asarray(ts_i), jnp.asarray(y_i),
-                           method="sequential_rts", mode="discrete")
+        ref = seq.solve(Problem.single(model, jnp.asarray(ts_i),
+                                       jnp.asarray(y_i)))
         np.testing.assert_allclose(sol.x, ref.x, atol=1e-6, rtol=0)
+
+
+def test_ragged_padding_report():
+    model = wiener_velocity()
+    lengths = [12, 20, 35]          # buckets: 20 (x2 records), 40 (x1)
+    records = []
+    for i, N in enumerate(lengths):
+        ts_i = time_grid(0.0, N / 20.0, N)
+        _, y_i = simulate_linear(model, ts_i, jax.random.PRNGKey(70 + i))
+        records.append((np.asarray(ts_i), np.asarray(y_i)))
+    est = Estimator(model, method="parallel_rts",
+                    options=_options("parallel_rts", nsub=NSUB,
+                                     mode="discrete"))
+    sols = est.solve(Problem.ragged(model, records))
+    report = sols[0].padding
+    assert all(s.padding is report for s in sols)
+    assert report.lengths == (12, 20, 35)
+    assert [(b.n_pad, b.records, b.batch) for b in report.buckets] == [
+        (20, 2, 2), (40, 1, 1)]
+    assert report.records == 3
+    assert report.real_intervals == 67
+    assert report.solved_intervals == 2 * 20 + 40
+    assert 0.0 < report.interval_utilisation <= 1.0
+    assert report.row_utilisation == 1.0
+    # bucket_sizes override routes every record into one bucket
+    sols2 = est.solve(Problem.ragged(model, records, bucket_sizes=[40]))
+    assert [(b.n_pad, b.records) for b in sols2[0].padding.buckets] == [
+        (40, 3)]
+    for a, b in zip(sols, sols2):
+        np.testing.assert_allclose(a.x, b.x, atol=1e-6, rtol=0)
 
 
 def test_executable_cache_reuse():
     model, ts, ys = _linear_batch(B=2, seed=40)
-    kwargs = dict(method="parallel_rts", nsub=NSUB, mode="discrete")
-    map_estimate_batched(model, ts, ys, **kwargs)
+    est = Estimator(model, method="parallel_rts",
+                    options=_options("parallel_rts", nsub=NSUB,
+                                     mode="discrete"))
+    est.solve(Problem.stacked(model, ts, ys))
     before = cache_stats()
-    map_estimate_batched(model, ts, ys * 2.0, **kwargs)   # same shapes
+    est.solve(Problem.stacked(model, ts, ys * 2.0))   # same shapes
     after = cache_stats()
     assert after["hits"] == before["hits"] + 1
     assert after["misses"] == before["misses"]
-    # a new shape compiles a new executable
-    map_estimate_batched(model, ts, ys[:1], **kwargs)
+    # a new shape compiles a new executable ...
+    est.solve(Problem.stacked(model, ts, ys[:1]))
+    assert cache_stats()["misses"] == before["misses"] + 1
+    # ... and a second Estimator with EQUAL options reuses the first's
+    # executable (the cache is shared and keyed by value, not instance).
+    est2 = Estimator(model, method="parallel_rts",
+                     options=_options("parallel_rts", nsub=NSUB,
+                                      mode="discrete"))
+    est2.solve(Problem.stacked(model, ts, ys))
     assert cache_stats()["misses"] == before["misses"] + 1
 
 
-def test_method_registry_dispatch():
-    from repro.core import get_solver, method_names, register_method
-    from repro.core.sequential import sequential_rts
-
-    assert {"parallel_rts", "parallel_two_filter", "sequential_rts",
-            "sequential_two_filter"} <= set(method_names())
-    with pytest.raises(ValueError):
-        get_solver("no_such_method")
-
-    register_method("_test_seq_rts",
-                    lambda g, nsub, mode: sequential_rts(g, mode),
-                    overwrite=True)
-    model, ts, ys = _linear_batch(B=1, seed=60)
-    sol = map_estimate(model, ts, ys[0], method="_test_seq_rts",
-                       mode="discrete")
-    ref = map_estimate(model, ts, ys[0], method="sequential_rts",
-                       mode="discrete")
-    np.testing.assert_allclose(sol.x, ref.x, atol=1e-12, rtol=0)
-    with pytest.raises(ValueError):              # no silent overwrite
-        register_method("_test_seq_rts", lambda g, n, m: None)
-
-
-def test_batched_input_validation():
+def test_stacked_input_validation():
     model, ts, ys = _linear_batch(B=2, seed=50)
     with pytest.raises(ValueError):
-        map_estimate_batched(model, ts, ys[0])            # missing batch axis
+        Problem.stacked(model, ts, ys[0])            # missing batch axis
     with pytest.raises(ValueError):
-        map_estimate_batched(model, ts[:-1], ys)          # N mismatch
+        Problem.stacked(model, ts[:-1], ys)          # N mismatch
     with pytest.raises(ValueError):
-        map_estimate_batched(model, ts, ys,
-                             measurement_mask=jnp.ones((2, 3)))
+        Problem.stacked(model, ts, ys,
+                        measurement_mask=jnp.ones((2, 3)))
     with pytest.raises(ValueError):
-        map_estimate_batched(model, ts, ys, method="no_such_method")
+        Estimator(model, method="no_such_method")

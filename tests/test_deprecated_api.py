@@ -1,0 +1,205 @@
+"""The legacy function surface is deprecation shims over Estimator/Problem.
+
+This is the ONLY test module allowed to touch the old entry points: tier-1
+runs with ``DeprecationWarning`` promoted to an error (see pyproject), so
+any internal code still calling the old surface fails loudly.  Every shim
+must (a) warn and (b) return results numerically identical to the new API
+-- they construct the same Problem/Estimator and hit the same cached
+executable, so the comparison is exact (``assert_array_equal``), for both
+linear and nonlinear (coordinated-turn) models and both sequential and
+parallel methods.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import coordinated_turn, wiener_velocity
+from repro.core import (
+    Estimator,
+    ParallelOptions,
+    Problem,
+    SequentialOptions,
+    get_method,
+    get_solver,
+    grid_lqt_from_linear,
+    iterated_map,
+    legacy_options,
+    map_estimate,
+    map_estimate_batched,
+    map_estimate_ragged,
+    method_names,
+    register_method,
+    sequential_rts,
+    simulate_linear,
+    simulate_nonlinear,
+    time_grid,
+)
+from repro.serving import TrajectoryEngine
+
+NSUB = 5
+METHODS_UNDER_TEST = ["sequential_rts", "parallel_rts"]
+
+
+@pytest.fixture(scope="module")
+def linear_problem():
+    model = wiener_velocity()
+    ts = time_grid(0.0, 1.0, 4 * NSUB)
+    _, y = simulate_linear(model, ts, jax.random.PRNGKey(0))
+    return model, ts, y
+
+
+@pytest.fixture(scope="module")
+def nonlinear_problem():
+    model = coordinated_turn()
+    ts = time_grid(0.0, 1.0, 4 * NSUB)
+    _, y = simulate_nonlinear(model, ts, jax.random.PRNGKey(1))
+    return model, ts, y
+
+
+def _assert_same(old, new, fields=("x", "S", "v")):
+    for f in fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(old, f)), np.asarray(getattr(new, f)),
+            err_msg=f"shim diverged from Estimator surface on {f!r}")
+
+
+@pytest.mark.parametrize("method", METHODS_UNDER_TEST)
+def test_map_estimate_linear_equivalence(linear_problem, method):
+    model, ts, y = linear_problem
+    with pytest.warns(DeprecationWarning, match="map_estimate"):
+        old = map_estimate(model, ts, y, method=method, nsub=NSUB,
+                           mode="discrete")
+    new = Estimator(
+        model, method=method,
+        options=get_method(method).options_cls.from_legacy(
+            nsub=NSUB, mode="discrete"),
+    ).solve(Problem.single(model, ts, y))
+    _assert_same(old, new)
+
+
+@pytest.mark.parametrize("method", METHODS_UNDER_TEST)
+def test_map_estimate_nonlinear_equivalence(nonlinear_problem, method):
+    model, ts, y = nonlinear_problem
+    with pytest.warns(DeprecationWarning, match="map_estimate"):
+        old = map_estimate(model, ts, y, method=method, nsub=NSUB,
+                           mode="euler", iterations=3)
+    new = Estimator(
+        model, method=method,
+        options=legacy_options(model, method, nsub=NSUB, mode="euler",
+                               iterations=3),
+    ).solve(Problem.single(model, ts, y))
+    _assert_same(old, new)
+    np.testing.assert_array_equal(np.asarray(old.cost_trace),
+                                  np.asarray(new.cost_trace))
+
+
+@pytest.mark.parametrize("method", METHODS_UNDER_TEST)
+def test_iterated_map_equivalence(nonlinear_problem, method):
+    model, ts, y = nonlinear_problem
+    with pytest.warns(DeprecationWarning, match="iterated_map"):
+        old = iterated_map(model, ts, y, iterations=3, method=method,
+                           nsub=NSUB, mode="discrete", x_init=model.m0)
+    new = Estimator(
+        model, method=method,
+        options=legacy_options(model, method, nsub=NSUB, mode="discrete",
+                               iterations=3),
+    ).solve(Problem.single(model, ts, y, x_init=model.m0))
+    _assert_same(old, new)
+
+
+def test_map_estimate_batched_equivalence(linear_problem):
+    model, ts, y = linear_problem
+    ys = jnp.stack([y, y * 0.5])
+    with pytest.warns(DeprecationWarning, match="map_estimate_batched"):
+        old = map_estimate_batched(model, ts, ys, method="parallel_rts",
+                                   nsub=NSUB, mode="discrete")
+    new = Estimator(
+        model, method="parallel_rts",
+        options=ParallelOptions(nsub=NSUB, mode="discrete"),
+    ).solve(Problem.stacked(model, ts, ys))
+    _assert_same(old, new)
+
+
+def test_map_estimate_ragged_equivalence():
+    model = wiener_velocity()
+    records = []
+    for i, N in enumerate([12, 20, 35]):
+        ts_i = time_grid(0.0, N / 20.0, N)
+        _, y_i = simulate_linear(model, ts_i, jax.random.PRNGKey(30 + i))
+        records.append((np.asarray(ts_i), np.asarray(y_i)))
+    with pytest.warns(DeprecationWarning, match="map_estimate_ragged"):
+        old = map_estimate_ragged(model, records, method="parallel_rts",
+                                  nsub=NSUB, mode="discrete")
+    new = Estimator(
+        model, method="parallel_rts",
+        options=ParallelOptions(nsub=NSUB, mode="discrete"),
+    ).solve(Problem.ragged(model, records))
+    assert len(old) == len(new)
+    for o, n in zip(old, new):
+        _assert_same(o, n)
+    assert old[0].padding == new[0].padding
+
+
+def test_trajectory_engine_legacy_kwargs():
+    model = wiener_velocity()
+    recs = []
+    for i, N in enumerate([12, 20]):
+        ts_i = time_grid(0.0, N / 20.0, N)
+        _, y_i = simulate_linear(model, ts_i, jax.random.PRNGKey(40 + i))
+        recs.append((np.asarray(ts_i), np.asarray(y_i)))
+    with pytest.warns(DeprecationWarning, match="TrajectoryEngine"):
+        legacy = TrajectoryEngine(model, batch=2, method="parallel_rts",
+                                  nsub=NSUB, mode="discrete")
+    modern = TrajectoryEngine(model, batch=2, method="parallel_rts",
+                              options=ParallelOptions(nsub=NSUB,
+                                                      mode="discrete"))
+    assert legacy.estimator.options == modern.estimator.options
+    for o, n in zip(legacy.estimate(recs), modern.estimate(recs)):
+        _assert_same(o, n)
+
+
+def test_methods_snapshot_is_now_a_live_view():
+    import repro.core as core
+    import repro.core.api as api
+    register_method("_late_registered",
+                    lambda g, o: sequential_rts(g, o.mode),
+                    SequentialOptions, overwrite=True)
+    for module in (core, api):
+        with pytest.warns(DeprecationWarning, match="METHODS"):
+            live = module.METHODS
+        # the old import-time snapshot silently missed late registrations
+        assert "_late_registered" in live
+    assert "_late_registered" in method_names()
+    with pytest.raises(AttributeError):
+        core.NO_SUCH_ATTRIBUTE
+
+
+def test_get_solver_and_legacy_registration(linear_problem):
+    """The pre-options registry surface keeps working: get_solver returns a
+    (grid, nsub, mode) adapter, and register_method still accepts a legacy
+    (grid, nsub, mode) solver when options_cls is omitted."""
+    model, ts, y = linear_problem
+    grid = grid_lqt_from_linear(model, ts, y)
+    sol = get_solver("sequential_rts")(grid, NSUB, "discrete")
+    ref = sequential_rts(grid, "discrete")
+    np.testing.assert_array_equal(np.asarray(sol.x), np.asarray(ref.x))
+
+    register_method("_legacy_sig",
+                    lambda g, nsub, mode: sequential_rts(g, mode),
+                    overwrite=True)
+    spec = get_method("_legacy_sig")
+    assert spec.options_cls is ParallelOptions    # legacy default
+    out = Estimator(model, method="_legacy_sig",
+                    options=ParallelOptions(mode="discrete")
+                    ).solve(Problem.single(model, ts, y))
+    np.testing.assert_array_equal(np.asarray(out.x), np.asarray(ref.x))
+
+
+def test_slice_solution_supports_legacy_map_solution():
+    from repro.core import MAPSolution, slice_solution
+    sol = MAPSolution(x=jnp.zeros((2, 8, 3)), S=jnp.zeros((2, 8, 3, 3)),
+                      v=jnp.zeros((2, 8, 3)))
+    out = slice_solution(sol, 0, 5)
+    assert isinstance(out, MAPSolution)
+    assert out.x.shape == (6, 3) and out.cov is None

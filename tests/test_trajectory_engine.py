@@ -6,11 +6,15 @@ import numpy as np
 import pytest
 
 from helpers import wiener_velocity
-from repro.core import map_estimate, simulate_linear, time_grid
+from repro.core import (
+    Estimator, ParallelOptions, Problem, SequentialOptions, simulate_linear,
+    time_grid,
+)
 from repro.launch.mesh import make_host_mesh
 from repro.serving import TrajectoryEngine
 
 NSUB = 5
+OPTIONS = ParallelOptions(nsub=NSUB, mode="discrete")
 
 
 def _record(model, N, seed):
@@ -21,8 +25,7 @@ def _record(model, N, seed):
 
 def _engine(model, **kw):
     kw.setdefault("batch", 4)
-    kw.setdefault("nsub", NSUB)
-    kw.setdefault("mode", "discrete")
+    kw.setdefault("options", OPTIONS)
     return TrajectoryEngine(model, **kw)
 
 
@@ -54,12 +57,14 @@ def test_results_match_direct_solve():
     recs = [_record(model, N, 10 + i)
             for i, N in enumerate([12, 20, 35, 20, 17])]
     sols = engine.estimate(recs)
+    seq = Estimator(model, method="sequential_rts",
+                    options=SequentialOptions(mode="discrete"))
     for (ts, y), sol in zip(recs, sols):
         assert sol.x.shape == (y.shape[0] + 1, model.nx)
         # nsub-free sequential reference handles the non-multiple-of-nsub
         # lengths; discrete mode makes it exact vs the parallel engine.
-        ref = map_estimate(model, jnp.asarray(ts), jnp.asarray(y),
-                           method="sequential_rts", mode="discrete")
+        ref = seq.solve(Problem.single(
+            model, jnp.asarray(ts), jnp.asarray(y)))
         np.testing.assert_allclose(sol.x, ref.x, atol=1e-6, rtol=0)
 
 
@@ -98,6 +103,20 @@ def test_submit_validation_and_config_errors():
         engine.submit(ts, y[:, 0])                # y not 2-D
     with pytest.raises(ValueError):
         TrajectoryEngine(model, batch=0)
+    with pytest.raises(TypeError):                # unknown legacy kwarg
+        TrajectoryEngine(model, n_sub=3)
+    with pytest.raises(TypeError):                # options + legacy kwargs
+        TrajectoryEngine(model, options=OPTIONS, nsub=3)
+
+
+def test_sequential_engine_uses_unit_buckets():
+    """Sequential methods have no block constraint: buckets are bare
+    powers of two (block_size 1), not multiples of a default nsub."""
+    model = wiener_velocity()
+    engine = TrajectoryEngine(model, batch=2, method="sequential_rts")
+    assert engine.estimator.block_size == 1
+    engine.submit(*_record(model, 12, 60))
+    assert engine._queue[0].n_pad == 16
 
 
 def test_sharded_batch_path():
@@ -107,7 +126,8 @@ def test_sharded_batch_path():
     engine = _engine(model, batch=2 * mesh.shape["data"], mesh=mesh)
     recs = [_record(model, 20, 50 + i) for i in range(3)]
     sols = engine.estimate(recs)
+    par = Estimator(model, method="parallel_rts", options=OPTIONS)
     for (ts, y), sol in zip(recs, sols):
-        ref = map_estimate(model, jnp.asarray(ts), jnp.asarray(y),
-                           method="parallel_rts", nsub=NSUB, mode="discrete")
+        ref = par.solve(Problem.single(
+            model, jnp.asarray(ts), jnp.asarray(y)))
         np.testing.assert_allclose(sol.x, ref.x, atol=1e-6, rtol=0)

@@ -25,30 +25,53 @@ def _time(fn, *args, repeats=5):
     return (time.perf_counter() - t0) / repeats * 1e6
 
 
+def _rand_lqt_elems(rng, B, nx):
+    """Batched random LQT elements (PSD C/J), f32 — shared by the
+    lqt_combine and lqt_scan benchmark sections."""
+    from repro.core.types import LQTElement
+
+    def psd():
+        A = rng.standard_normal((B, nx, nx))
+        return jnp.asarray(
+            np.einsum("bij,bkj->bik", A, A) / nx + 0.1 * np.eye(nx),
+            jnp.float32)
+
+    return LQTElement(
+        jnp.asarray(rng.standard_normal((B, nx, nx)) * 0.6, jnp.float32),
+        jnp.asarray(rng.standard_normal((B, nx)), jnp.float32),
+        psd(),
+        jnp.asarray(rng.standard_normal((B, nx)), jnp.float32), psd())
+
+
 def run(smoke=False):
     rows = []
     rng = np.random.default_rng(0)
 
     # lqt_combine: batched eq. (42)
-    from repro.core.types import LQTElement
     from repro.core.combine import lqt_combine
     for B, nx in [(64, 4)] if smoke else [(1024, 4), (4096, 4), (1024, 8)]:
-        def psd():
-            A = rng.standard_normal((B, nx, nx))
-            return jnp.asarray(
-                np.einsum("bij,bkj->bik", A, A) / nx + 0.1 * np.eye(nx),
-                jnp.float32)
-        e1 = LQTElement(
-            jnp.asarray(rng.standard_normal((B, nx, nx)), jnp.float32),
-            jnp.asarray(rng.standard_normal((B, nx)), jnp.float32),
-            psd(),
-            jnp.asarray(rng.standard_normal((B, nx)), jnp.float32), psd())
+        e1 = _rand_lqt_elems(rng, B, nx)
         us = _time(jax.jit(lqt_combine), e1, e1)
         flops = B * (2 * nx ** 3 * 8)  # ~8 small matmuls + solve
         rows.append({
             "name": f"kern/lqt_combine/B{B}_nx{nx}",
             "us_per_call": us,
             "derived": f"gflops={flops / us / 1e3:.2f}",
+        })
+
+    # lqt whole-scan (jnp path; the parallel_kernel method replaces this
+    # suffix scan with the lane-major Pallas multi-level scan -- same
+    # combine tree, so level count and per-level lane batches transfer)
+    from repro.kernels.lqt_combine import lqt_scan_ref
+    for T, nx in [(64, 4)] if smoke else [(1024, 4), (4096, 4), (1024, 8)]:
+        elems = _rand_lqt_elems(rng, T, nx)
+        fn = jax.jit(lambda e: lqt_scan_ref(e, reverse=True))
+        us = _time(fn, elems)
+        levels = max(1, int(np.ceil(np.log2(T))))
+        rows.append({
+            "name": f"kern/lqt_scan/T{T}_nx{nx}",
+            "us_per_call": us,
+            "derived": f"levels={levels},elems_per_s={T / (us / 1e6):.0f}",
         })
 
     # ssd chunked scan (jnp path; == kernel algorithm)

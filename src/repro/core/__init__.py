@@ -37,6 +37,7 @@ from .estimator import (
 from .nonlinear import iterated_map, iterated_solve
 from .options import (
     IteratedOptions,
+    KernelOptions,
     ParallelOptions,
     SequentialOptions,
     SolverOptions,
@@ -86,7 +87,7 @@ __all__ = [
     # unified surface
     "Estimator", "Problem", "Solution",
     "SolverOptions", "SequentialOptions", "ParallelOptions",
-    "TwoFilterOptions", "IteratedOptions",
+    "TwoFilterOptions", "KernelOptions", "IteratedOptions",
     "PaddingReport", "BucketInfo", "ExecutableCache",
     "cache_stats", "clear_cache",
     # registry

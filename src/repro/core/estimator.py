@@ -345,7 +345,11 @@ class Estimator:
         passed to :meth:`solve` must be built with this model object (the
         executable cache is anchored on it).
       method: registered method name (see
-        :func:`repro.core.registry.method_names`).
+        :func:`repro.core.registry.method_names`).  Backends are fully
+        interchangeable here -- e.g. ``"parallel_kernel"`` (the Pallas
+        lane-major scan, ``docs/KERNELS.md``) runs through the same
+        executable cache, vmap/shard_map batching and AOT ``lower`` path
+        as the jnp methods.
       options: instance of the method's options class
         (:class:`~repro.core.options.SolverOptions` subclass); for
         nonlinear models either that (outer loop defaults) or an

@@ -12,6 +12,10 @@ universal keyword soup on every entry point:
 * :class:`TwoFilterOptions` -- parallel options + the two-filter-specific
   ``block0_fill`` / ``tf_fill`` / ``jitter`` knobs of
   :func:`repro.core.parallel.parallel_two_filter`;
+* :class:`KernelOptions` -- parallel options + the Pallas-kernel knobs of
+  the ``parallel_kernel`` method (``block_size`` lanes per kernel grid
+  step, ``interpret`` tri-state with automatic non-TPU fallback,
+  ``precision`` compute dtype of the kernel scan);
 * :class:`IteratedOptions` -- the iterated-linearisation (nonlinear) layer:
   ``iterations`` / ``divergence_correction`` plus the ``inner`` linear
   options forwarded to the method that solves each linearised subproblem.
@@ -78,6 +82,53 @@ class ParallelOptions(SolverOptions):
         super().__post_init__()
         if not isinstance(self.nsub, int) or self.nsub < 1:
             raise ValueError(f"nsub must be a positive int, got {self.nsub!r}")
+
+
+KERNEL_PRECISIONS = ("default", "float32", "float64")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelOptions(ParallelOptions):
+    """Options of the kernel-backed parallel smoother (``parallel_kernel``).
+
+    ``block_size`` is the lane count per Pallas grid step of the combine
+    kernel (128-multiples feed full TPU VREG rows; the wrapper shrinks it
+    automatically for small scans).  ``interpret=None`` resolves at solve
+    time to ``True`` off-TPU (Pallas interpreter, bit-accurate semantics)
+    and ``False`` on TPU (Mosaic); pass an explicit bool to force either.
+    ``precision`` is the kernel compute dtype: ``"default"`` keeps the
+    element dtype, ``"float32"``/``"float64"`` cast the lane-major scan
+    (TPUs have no native f64 -- use ``"float32"`` there for x64 grids).
+    """
+
+    block_size: int = 512
+    interpret: Optional[bool] = None
+    precision: str = "default"
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        if not isinstance(self.block_size, int) or self.block_size < 8:
+            raise ValueError(
+                f"block_size must be an int >= 8, got {self.block_size!r}")
+        if self.interpret is not None and not isinstance(self.interpret,
+                                                         bool):
+            raise ValueError(
+                f"interpret must be None (auto) or a bool, "
+                f"got {self.interpret!r}")
+        if self.precision not in KERNEL_PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {KERNEL_PRECISIONS}, "
+                f"got {self.precision!r}")
+
+    def resolve_interpret(self) -> bool:
+        """The effective interpret flag: explicit bool wins; ``None`` means
+        interpret everywhere except a real TPU backend (Mosaic compilation
+        needs one)."""
+        if self.interpret is not None:
+            return self.interpret
+        import jax
+
+        return jax.default_backend() != "tpu"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -149,10 +149,18 @@ def _recover_affine(grid: GridLQT, values_full: ValueFn, nsub: int,
 def parallel_rts(
     grid: GridLQT, nsub: int, mode: str = "euler",
     combine_fn: Callable = lqt_combine,
+    suffix_scan_fn: Optional[Callable] = None,
 ) -> MAPSolution:
-    """Parallel continuous-time RTS smoother (sections 4.1-4.3, method 1)."""
+    """Parallel continuous-time RTS smoother (sections 4.1-4.3, method 1).
+
+    ``suffix_scan_fn`` (elems -> inclusive suffix combine) replaces the
+    default on-chip associative scan of the backward pass; the
+    ``parallel_kernel`` method passes the lane-major Pallas scan
+    (:func:`repro.kernels.lqt_combine.ops.kernel_suffix_scan`) here.
+    """
     values_full, _, _, _ = parallel_backward(
-        grid, nsub, mode, combine_fn=combine_fn)
+        grid, nsub, mode, combine_fn=combine_fn,
+        suffix_scan_fn=suffix_scan_fn)
     phi = _recover_affine(grid, values_full, nsub, mode)
     return MAPSolution(
         x=jnp.flip(phi, axis=0),

@@ -104,7 +104,9 @@ def distributed_scan(
     # (P, ...) per-shard totals, replicated on every shard.
     totals = jax.lax.all_gather(carry, axis_name, axis=0, tiled=False)
     idx = jax.lax.axis_index(axis_name)
-    p = jax.lax.axis_size(axis_name)
+    # psum of 1 == the axis size; jax.lax.axis_size is not available on
+    # every supported jax release, psum works inside shard_map on all.
+    p = jax.lax.psum(1, axis_name)
 
     if reverse:
         # exclusive suffix of totals strictly AFTER this shard

@@ -19,6 +19,7 @@ from __future__ import annotations
 from typing import Callable, Dict, NamedTuple, Optional, Tuple, Type
 
 from .options import (
+    KernelOptions,
     ParallelOptions,
     SequentialOptions,
     SolverOptions,
@@ -102,10 +103,29 @@ def method_names() -> Tuple[str, ...]:
     return tuple(_METHODS)
 
 
+def _parallel_kernel_solver(grid: GridLQT, o: KernelOptions) -> MAPSolution:
+    """RTS smoother with the backward scan run by the Pallas lane-major
+    combine kernel (one layout round-trip for the whole multi-level scan).
+
+    The kernel package is imported lazily so ``repro.core`` never depends
+    on ``repro.kernels`` at import time (the kernels import core types).
+    """
+    from repro.kernels.lqt_combine.ops import kernel_suffix_scan
+
+    interpret = o.resolve_interpret()
+
+    def suffix(elems):
+        return kernel_suffix_scan(elems, block_b=o.block_size,
+                                  interpret=interpret, precision=o.precision)
+
+    return parallel_rts(grid, o.nsub, o.mode, suffix_scan_fn=suffix)
+
+
 register_method(
     "parallel_rts",
     lambda grid, o: parallel_rts(grid, o.nsub, o.mode),
     ParallelOptions)
+register_method("parallel_kernel", _parallel_kernel_solver, KernelOptions)
 register_method(
     "parallel_two_filter",
     lambda grid, o: parallel_two_filter(

@@ -30,7 +30,9 @@ def compressed_psum(grads, err, axis_name: str) -> Tuple[Any, Any]:
     Returns (mean_grads_f32, new_err).  Call INSIDE shard_map over the
     data-parallel axis with per-shard (unreduced) gradients.
     """
-    size = jax.lax.axis_size(axis_name)
+    # psum of 1 == the axis size; jax.lax.axis_size is not available on
+    # every supported jax release, psum works inside shard_map on all.
+    size = jax.lax.psum(1, axis_name)
 
     def one(g, e):
         target = g.astype(jnp.float32) + e

@@ -1,0 +1,20 @@
+"""Version shims for the Pallas TPU API surface.
+
+The kernels are written against the current Pallas names; this module pins
+the aliases that moved between JAX releases so the same kernel source runs
+on every JAX this repo supports (>= 0.4.30):
+
+* ``CompilerParams``: ``jax.experimental.pallas.tpu`` exposed the TPU
+  compiler-parameter struct as ``TPUCompilerParams`` up to ~0.4.x and
+  renamed it to ``CompilerParams`` later.  Same fields either way
+  (``dimension_semantics`` is all we use).
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None)
+if CompilerParams is None:  # pragma: no cover - depends on jax version
+    CompilerParams = _pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -1,2 +1,7 @@
-from .ops import lqt_combine_batched, scan_combine_fn
-from .ref import lqt_combine_ref
+from .ops import (
+    kernel_prefix_scan,
+    kernel_suffix_scan,
+    lqt_combine_batched,
+    scan_combine_fn,
+)
+from .ref import lqt_combine_ref, lqt_scan_ref

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._compat import CompilerParams
+
 
 def _matmat(X, Y, nx):
     """(nx, nx, TB) @ (nx, nx, TB) -> (nx, nx, TB), lanes = batch."""
@@ -140,5 +142,7 @@ def lqt_combine_lanes(ops1, ops2, *, block_b: int = 512,
         in_specs=specs + specs,
         out_specs=tuple(specs),
         out_shape=out_shapes,
+        # lane blocks are independent element batches -> parallel grid
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(A1, b1, C1, e1, J1, A2, b2, C2, e2, J2)

@@ -3,8 +3,14 @@
 ``lqt_combine_batched`` takes the natural (B, nx, nx)/(B, nx) layout,
 re-lays out to the kernel's lane-major form (batch minor), pads B to the
 block size, runs the kernel and restores the layout.  When the whole scan
-runs kernel-side, keep the lane-major layout across levels instead (see
-``scan_combine_fn``) so the transposes happen once, not per level.
+runs kernel-side, keep the lane-major layout across levels instead --
+``kernel_prefix_scan`` / ``kernel_suffix_scan`` below do exactly that:
+ONE ``_to_lanes``/``_from_lanes`` round-trip total, with every scan level
+slicing/combining lane-major operands in place.  The multi-level tree is
+the same work-efficient recursion as ``jax.lax.associative_scan``, so the
+combine ORDER matches the jnp scan; the per-combine arithmetic still
+differs (unpivoted Gauss-Jordan vs pivoted ``linalg.solve``), so results
+agree to tolerance, not bit-exactly.
 
 On non-TPU backends (this container) ``interpret=True`` executes the kernel
 body with the Pallas interpreter -- bit-accurate semantics, no Mosaic.
@@ -49,21 +55,114 @@ def _pad_lanes(ops, pad):
     return tuple(out)
 
 
+def _combine_lanes(ops1, ops2, *, block_b: int, interpret: bool):
+    """Kernel combine on lane-major 5-tuples of ANY lane count.
+
+    Pads both operand tuples to a ``block_b`` multiple (zero lanes are
+    garbage-free: C1 J2 = 0 so the Gauss-Jordan pivots stay 1) and slices
+    the pad back off.  ``B == 0`` (empty tree levels) short-circuits.
+    """
+    B = ops1[0].shape[-1]
+    if B == 0:
+        return ops1
+    bb = min(block_b, max(8, B))
+    pad = (-B) % bb
+    out = lqt_combine_lanes(_pad_lanes(ops1, pad), _pad_lanes(ops2, pad),
+                            block_b=bb, interpret=interpret)
+    return tuple(a[..., :B] for a in out)
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def lqt_combine_batched(e1: LQTElement, e2: LQTElement, *,
                         block_b: int = 512,
                         interpret: bool = False) -> LQTElement:
     """Kernel-backed eq. (42) combine on (B, nx, nx)-layout elements."""
-    B = e1.A.shape[0]
-    if B == 0:  # associative_scan emits empty combines at some tree levels
+    if e1.A.shape[0] == 0:  # associative_scan emits empty tree levels
         return e1
-    bb = min(block_b, max(8, B))
-    pad = (-B) % bb
-    ops1 = _pad_lanes(_to_lanes(e1), pad)
-    ops2 = _pad_lanes(_to_lanes(e2), pad)
-    # padded lanes carry zeros: C1 J2 = 0 -> M = I, well-defined garbage-free
-    out = lqt_combine_lanes(ops1, ops2, block_b=bb, interpret=interpret)
-    out = tuple(a[..., :B] for a in out)
+    return _from_lanes(_combine_lanes(_to_lanes(e1), _to_lanes(e2),
+                                      block_b=block_b, interpret=interpret))
+
+
+# ---------------------------------------------------------------------------
+# Whole-scan kernel path: multi-level associative scan in lane-major layout
+# ---------------------------------------------------------------------------
+
+
+def _interleave_lanes(even, odd):
+    """Riffle two lane-major arrays: out[..., 0::2] = even, [1::2] = odd."""
+    n = even.shape[-1] + odd.shape[-1]
+    out = jnp.zeros(even.shape[:-1] + (n,), even.dtype)
+    return out.at[..., 0::2].set(even).at[..., 1::2].set(odd)
+
+
+def _scan_lanes(ops, combine):
+    """Inclusive prefix scan over the LANE (last) axis, earlier operand
+    first -- the recursive pair-reduce/odd-scan/even-fixup tree of
+    ``jax.lax.associative_scan``, expressed on lane-major tuples so each
+    level is one (or two) kernel combines over lane slices."""
+    n = ops[0].shape[-1]
+    if n < 2:
+        return ops
+    evens = tuple(a[..., 0:-1:2] for a in ops)          # lanes 0, 2, ...
+    odds = tuple(a[..., 1::2] for a in ops)             # lanes 1, 3, ...
+    odd_scanned = _scan_lanes(combine(evens, odds), combine)
+    even_in = tuple(a[..., 2::2] for a in ops)          # lanes 2, 4, ...
+    left = odd_scanned if n % 2 else tuple(a[..., :-1] for a in odd_scanned)
+    even_scanned = combine(left, even_in)
+    even_out = tuple(
+        jnp.concatenate([a[..., :1], e], axis=-1)
+        for a, e in zip(ops, even_scanned))
+    return tuple(map(_interleave_lanes, even_out, odd_scanned))
+
+
+def _scan_dtype(precision: str, dtype):
+    if precision in (None, "default"):
+        return dtype
+    if precision == "float64" and not jax.config.jax_enable_x64:
+        # astype would silently canonicalise the cast down to float32
+        raise ValueError(
+            "precision='float64' requires jax_enable_x64 (the cast would "
+            "silently truncate to float32 under the default JAX config)")
+    return jnp.dtype(precision)
+
+
+def kernel_prefix_scan(elems: LQTElement, *, block_b: int = 512,
+                       interpret: bool = False,
+                       precision: str = "default") -> LQTElement:
+    """Inclusive prefix combine along axis 0 (earlier operand first), run
+    kernel-side in lane-major layout with one layout round-trip total.
+
+    ``precision`` selects the kernel compute dtype (``"default"`` keeps the
+    element dtype; ``"float32"``/``"float64"`` cast for the scan and cast
+    the result back).
+    """
+    lanes = _to_lanes(elems)
+    in_dtype = lanes[0].dtype
+    cdtype = _scan_dtype(precision, in_dtype)
+    lanes = tuple(a.astype(cdtype) for a in lanes)
+    combine = functools.partial(_combine_lanes, block_b=block_b,
+                                interpret=interpret)
+    out = _scan_lanes(lanes, combine)
+    return _from_lanes(tuple(a.astype(in_dtype) for a in out))
+
+
+def kernel_suffix_scan(elems: LQTElement, *, block_b: int = 512,
+                       interpret: bool = False,
+                       precision: str = "default") -> LQTElement:
+    """Inclusive suffix combine along axis 0 (earlier operand first):
+    ``out[i] = a_i (x) ... (x) a_{T-1}``, matching
+    :func:`repro.core.pscan.suffix_scan` -- flip on the lane axis plus an
+    operand swap, so non-commutativity is preserved."""
+    lanes = _to_lanes(elems)
+    in_dtype = lanes[0].dtype
+    cdtype = _scan_dtype(precision, in_dtype)
+    flipped = tuple(jnp.flip(a.astype(cdtype), axis=-1) for a in lanes)
+
+    def swapped(a, b):
+        return _combine_lanes(b, a, block_b=block_b, interpret=interpret)
+
+    out = _scan_lanes(flipped, swapped)
+    out = tuple(jnp.flip(a, axis=-1).astype(in_dtype) for a in out)
     return _from_lanes(out)
 
 

@@ -6,9 +6,8 @@ arrays per operand side.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from repro.core.combine import lqt_combine as _core_combine
+from repro.core.pscan import prefix_scan, suffix_scan
 from repro.core.types import LQTElement
 
 
@@ -16,3 +15,12 @@ def lqt_combine_ref(A1, b1, C1, eta1, J1, A2, b2, C2, eta2, J2):
     out = _core_combine(
         LQTElement(A1, b1, C1, eta1, J1), LQTElement(A2, b2, C2, eta2, J2))
     return tuple(out)
+
+
+def lqt_scan_ref(elems: LQTElement, *, reverse: bool = False) -> LQTElement:
+    """Pure-jnp scan oracle for the whole-scan kernel path
+    (:func:`repro.kernels.lqt_combine.ops.kernel_prefix_scan` /
+    ``kernel_suffix_scan``): the core associative scan with the core
+    combine, in the element-major (scan axis 0) layout."""
+    scan = suffix_scan if reverse else prefix_scan
+    return scan(_core_combine, elems)

@@ -1,0 +1,90 @@
+"""Hypothesis property tests for the Pallas ``lqt_combine`` kernel
+(interpret mode): combine associativity on the batched lane layout, the
+zero-lane padding contract of the block wrapper, and identity elements
+being two-sided identities of the combine (the padding elements of
+bucketed kernel scans)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -e '.[test]')")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.elements import identity_element
+from repro.core.types import LQTElement
+from repro.kernels.lqt_combine import lqt_combine_batched, lqt_combine_ref
+from repro.kernels.lqt_combine.kernel import lqt_combine_lanes
+from repro.kernels.lqt_combine.ops import _pad_lanes, _to_lanes
+
+pytestmark = pytest.mark.kernel_interpret
+
+
+def _rand_batch(rng, B, n) -> LQTElement:
+    def psd():
+        A = rng.standard_normal((B, n, n))
+        return jnp.asarray(np.einsum("bij,bkj->bik", A, A) / n
+                           + 0.1 * np.eye(n))
+
+    return LQTElement(
+        jnp.asarray(rng.standard_normal((B, n, n)) * 0.6),
+        jnp.asarray(rng.standard_normal((B, n))),
+        psd(),
+        jnp.asarray(rng.standard_normal((B, n))),
+        psd())
+
+
+def _combine(e1, e2):
+    return lqt_combine_batched(e1, e2, interpret=True, block_b=8)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 5), st.integers(1, 9))
+def test_kernel_combine_associative(seed, n, B):
+    """(e1 (x) e2) (x) e3 == e1 (x) (e2 (x) e3) through the kernel."""
+    rng = np.random.default_rng(seed)
+    e1, e2, e3 = (_rand_batch(rng, B, n) for _ in range(3))
+    left = _combine(_combine(e1, e2), e3)
+    right = _combine(e1, _combine(e2, e3))
+    for a, b in zip(left, right):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-7, atol=1e-7)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 5), st.integers(1, 12))
+def test_zero_padded_lanes_are_garbage_free(seed, n, B):
+    """Zero lanes appended by ``_pad_lanes`` combine to exact zeros (the
+    Gauss-Jordan sees M = I) and never perturb the real lanes."""
+    rng = np.random.default_rng(seed)
+    e1, e2 = _rand_batch(rng, B, n), _rand_batch(rng, B, n)
+    pad = (-(B + 3)) % 8 + 3                     # a nonzero pad amount
+    ops1 = _pad_lanes(_to_lanes(e1), pad)
+    ops2 = _pad_lanes(_to_lanes(e2), pad)
+    bb = ops1[0].shape[-1]
+    out = lqt_combine_lanes(ops1, ops2, block_b=bb, interpret=True)
+    want = lqt_combine_ref(*e1, *e2)
+    for got_lane, w in zip(out, want):
+        # real lanes: exact combine of the unpadded operands
+        got = np.moveaxis(np.asarray(got_lane), -1, 0)[:B]
+        np.testing.assert_allclose(got, np.asarray(w), rtol=1e-9, atol=1e-9)
+        # pad lanes: identically zero
+        assert not np.any(np.asarray(got_lane)[..., B:])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 5), st.integers(1, 9))
+def test_identity_element_is_two_sided_identity(seed, n, B):
+    """combine(e, id) == combine(id, e) == e: identity elements are safe
+    scan padding on either side (eq. 34's zero-length interval)."""
+    rng = np.random.default_rng(seed)
+    e = _rand_batch(rng, B, n)
+    eid = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (B,) + a.shape),
+        identity_element(n, e.A.dtype))
+    for got in (_combine(e, eid), _combine(eid, e)):
+        for a, b in zip(got, e):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-9, atol=1e-9)

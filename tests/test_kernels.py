@@ -4,10 +4,21 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.elements import identity_element
 from repro.core.types import LQTElement
 from repro.kernels.flash_attention import attention, attention_trainable, mha_ref
-from repro.kernels.lqt_combine import lqt_combine_batched, lqt_combine_ref, scan_combine_fn
+from repro.kernels.lqt_combine import (
+    kernel_prefix_scan,
+    kernel_suffix_scan,
+    lqt_combine_batched,
+    lqt_combine_ref,
+    lqt_scan_ref,
+    scan_combine_fn,
+)
+from repro.kernels.lqt_combine.ops import _from_lanes, _pad_lanes, _to_lanes
 from repro.kernels.ssd import ssd, ssd_ref, ssd_trainable
+
+pytestmark = pytest.mark.kernel_interpret
 
 
 def _tol(dtype):
@@ -58,6 +69,95 @@ def test_kernel_backed_scan_matches_core_scan():
     got = prefix_scan(scan_combine_fn(interpret=True, block_b=8), elems)
     for g, w in zip(got, want):
         np.testing.assert_allclose(g, w, rtol=1e-8, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# lqt_combine: lane-major layout plumbing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,nx", [(1, 2), (7, 4), (32, 5)])
+def test_to_from_lanes_round_trip_identity(B, nx):
+    rng = np.random.default_rng(B * 10 + nx)
+    e = _rand_elems(rng, B, nx, jnp.float64)
+    back = _from_lanes(_to_lanes(e))
+    for g, w in zip(back, e):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_pad_lanes_zero_pad_is_noop():
+    rng = np.random.default_rng(0)
+    ops = _to_lanes(_rand_elems(rng, 12, 3, jnp.float64))
+    out = _pad_lanes(ops, 0)
+    assert out is ops or all(a is b for a, b in zip(out, ops))
+    padded = _pad_lanes(ops, 4)
+    for a, b in zip(padded, ops):
+        assert a.shape[-1] == b.shape[-1] + 4
+        np.testing.assert_array_equal(np.asarray(a[..., :12]), np.asarray(b))
+        assert not np.any(np.asarray(a[..., 12:]))
+
+
+def _append_identities(e: LQTElement, k: int) -> LQTElement:
+    eid = identity_element(e.nx, e.A.dtype)
+    tail = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (k,) + a.shape), eid)
+    return jax.tree_util.tree_map(
+        lambda x, t: jnp.concatenate([x, t], axis=0), e, tail)
+
+
+def test_identity_padded_tail_is_scan_identity():
+    """Appending identity elements to the scan tail leaves every original
+    prefix-scan entry unchanged (the padding contract of the kernel scan
+    when a grid is bucketed up to a longer length)."""
+    rng = np.random.default_rng(21)
+    e = _rand_elems(rng, 7, 4, jnp.float64)         # non-pow2 scan length
+    want = kernel_prefix_scan(e, interpret=True, block_b=8)
+    padded = kernel_prefix_scan(_append_identities(e, 3), interpret=True,
+                                block_b=8)
+    for g, w in zip(jax.tree_util.tree_map(lambda a: a[:7], padded), want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-10, atol=1e-10)
+    # ... and on the suffix side, identities PREPENDED are inert
+    want_s = kernel_suffix_scan(e, interpret=True, block_b=8)
+    eid = identity_element(4, e.A.dtype)
+    head = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (3,) + a.shape), eid)
+    pre = jax.tree_util.tree_map(
+        lambda h, x: jnp.concatenate([h, x], axis=0), head, e)
+    got_s = kernel_suffix_scan(pre, interpret=True, block_b=8)
+    for g, w in zip(jax.tree_util.tree_map(lambda a: a[3:], got_s), want_s):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-10, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# lqt_combine: whole-scan kernel path vs the jnp scan oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T", [1, 2, 5, 13])
+@pytest.mark.parametrize("reverse", [False, True])
+def test_kernel_scan_matches_scan_ref(T, reverse):
+    """One layout round-trip, multi-level lane-major scan == the core
+    associative scan, for pow2 and non-pow2 scan lengths both ways."""
+    rng = np.random.default_rng(100 + T)
+    e = _rand_elems(rng, T, 4, jnp.float64)
+    fn = kernel_suffix_scan if reverse else kernel_prefix_scan
+    got = fn(e, interpret=True, block_b=8)
+    want = lqt_scan_ref(e, reverse=reverse)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-9, atol=1e-9)
+
+
+def test_kernel_scan_precision_cast_round_trips_dtype():
+    rng = np.random.default_rng(3)
+    e = _rand_elems(rng, 9, 3, jnp.float64)
+    got = kernel_prefix_scan(e, interpret=True, block_b=8,
+                             precision="float32")
+    want = lqt_scan_ref(e)
+    for g, w in zip(got, want):
+        assert g.dtype == w.dtype == jnp.float64    # cast back after scan
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-4, atol=2e-4)
 
 
 # ---------------------------------------------------------------------------

@@ -66,9 +66,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny problem sizes (CI bit-rot check)")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write a BENCH json artifact for this section")
     args = ap.parse_args()
-    for r in run(smoke=args.smoke):
+    import repro.obs as obs
+    if args.json:
+        obs.enable()
+        obs.reset()
+    rows = run(smoke=args.smoke)
+    for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    if args.json:
+        obs.write_bench_json(
+            args.json, obs.bench_record("batch", rows, seeds={"batch": 0}))
 
 
 if __name__ == "__main__":

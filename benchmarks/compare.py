@@ -1,101 +1,155 @@
-"""Hillclimb comparison: baseline vs tagged variant roofline terms.
+"""Benchmark regression gate: diff a fresh ``BENCH_*.json`` against a
+committed baseline.
 
-Usage:
-  PYTHONPATH=src:. python -m benchmarks.compare --arch mamba2-370m \
-      --shape train_4k [--mesh pod256]
-Prints one row per tag found for the cell with the three terms, the
-dominant term, and deltas vs the untagged baseline.
+Usage (CI's ``bench-baseline`` job):
+
+  python benchmarks/compare.py BENCH_smoke.json \\
+      --against benchmarks/baselines/BENCH_seed.json --tolerance 0.5
+
+Two classes of check, matching how trustworthy each metric is on shared
+CPU runners:
+
+* **timing (warn-only by default)** -- per-row ``us_per_call`` ratios.
+  Wall time on CI machines is noisy, so a ratio beyond ``1 + tolerance``
+  prints a WARN line and does not fail the job.  ``--timing-hard``
+  upgrades these to hard failures for quiet dedicated runners.
+* **hard (always fail)** -- deterministic structural metrics derived from
+  the obs snapshot of the fixed smoke workload:
+    - a row present in the baseline but missing from the new run
+      (a benchmark section silently disappeared);
+    - executable-cache hit rate (``cache.hits / (hits + misses)``)
+      dropping by more than ``--hard-tolerance`` (a cache-key or
+      retrace regression: the same workload now compiles more);
+    - engine padding waste (``engine.padding_waste`` gauge) increasing
+      by more than ``--hard-tolerance`` (a bucketing/packing
+      regression: the same record mix now solves more padded
+      intervals).
+
+Exit status: 0 = pass (possibly with warnings), 1 = hard failure,
+2 = unusable input (missing file / schema violation).
 """
 from __future__ import annotations
 
 import argparse
-import glob
 import json
-import os
 import sys
+from pathlib import Path
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
-
-from benchmarks.flops import model_flops, step_cost  # noqa: E402
-from benchmarks.roofline import HBM_BW, LINK_BW, PEAK_FLOPS  # noqa: E402
-
-
-def cell_terms(rec, causal_skip=False, overrides=None):
-    from repro.config import SHAPE_SUITE, get_config
-    import dataclasses
-
-    cfg = get_config(rec["arch"])
-    if overrides:
-        typed = {}
-        for k, v in overrides.items():
-            cur = getattr(cfg, k)
-            typed[k] = (str(v).lower() in ("1", "true", "yes")
-                        if isinstance(cur, bool) else type(cur)(v))
-        cfg = dataclasses.replace(cfg, **typed)
-    shape = next(s for s in SHAPE_SUITE if s.name == rec["shape"])
-    chips = rec["num_devices"]
-    cost = step_cost(cfg, shape, chips, causal_skip=causal_skip)
-    mf = model_flops(cfg, shape)
-
-    coll = rec["collectives"]["total_bytes"]
-    hlo_path = rec.get("hlo_path")
-    if hlo_path and os.path.exists(hlo_path):
-        from repro.launch.hlo_parse import collective_analysis, load_hlo
-        wa = collective_analysis(load_hlo(hlo_path))
-        coll = wa["total_wire_bytes"]
-        detail = wa["wire_bytes"]
-    else:
-        detail = rec["collectives"]["bytes"]
-    t = {
-        "compute": cost.flops / (chips * PEAK_FLOPS),
-        "memory": cost.hbm_bytes / HBM_BW,
-        "collective": coll / LINK_BW,
-    }
-    lb = max(t.values())
-    return {
-        **t, "dominant": max(t, key=t.get),
-        "roofline_frac": mf / (chips * PEAK_FLOPS * lb),
-        "coll_detail_gb": {k: round(v / 1e9, 1) for k, v in detail.items()
-                           if v},
-        "mem_gb": (rec["memory_analysis"]["argument_size_in_bytes"]
-                   + rec["memory_analysis"]["temp_size_in_bytes"]) / 2**30,
-    }
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT))
+sys.path.insert(0, str(_ROOT / "src"))   # repro.obs without PYTHONPATH=src
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
-    ap.add_argument("--mesh", default="pod256")
-    ap.add_argument("--dir", default="artifacts/dryrun")
-    args = ap.parse_args()
+def _load(path):
+    from repro import obs
 
-    pattern = os.path.join(
-        args.dir, f"{args.mesh}--{args.arch}--{args.shape}*.json")
-    base = None
-    rows = []
-    for path in sorted(glob.glob(pattern)):
-        rec = json.load(open(path))
-        if rec.get("status") != "ok":
+    try:
+        with open(path) as f:
+            record = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"ERROR: cannot read {path}: {e}")
+        return None
+    errors = obs.validate_bench(record)
+    if errors:
+        print(f"ERROR: {path} fails BENCH schema v{obs.SCHEMA_VERSION}:")
+        for err in errors:
+            print(f"  - {err}")
+        return None
+    return record
+
+
+def _counter(record, name):
+    return record.get("obs", {}).get("counters", {}).get(name)
+
+
+def _gauge(record, name):
+    return record.get("obs", {}).get("gauges", {}).get(name)
+
+
+def cache_hit_rate(record):
+    hits = _counter(record, "cache.hits")
+    misses = _counter(record, "cache.misses")
+    if hits is None or misses is None or (hits + misses) == 0:
+        return None
+    return hits / (hits + misses)
+
+
+def compare(base, new, *, tolerance, hard_tolerance, timing_hard=False):
+    """Return (hard_failures, warnings) as lists of message strings."""
+    hard, warn = [], []
+
+    base_rows = {r["name"]: r for r in base["rows"]}
+    new_rows = {r["name"]: r for r in new["rows"]}
+    for name in sorted(base_rows):
+        if name not in new_rows:
+            hard.append(f"row missing from new run: {name}")
             continue
-        tag = rec.get("tag", "") or "baseline"
-        causal_skip = tag in ("Q2", "Q3", "S2") or "cskip" in tag
-        terms = cell_terms(rec, causal_skip=causal_skip,
-                           overrides=rec.get("overrides"))
-        rows.append((tag, terms))
-        if tag == "baseline":
-            base = terms
+        b, n = base_rows[name]["us_per_call"], new_rows[name]["us_per_call"]
+        if b > 0 and n > b * (1.0 + tolerance):
+            msg = (f"timing regression {name}: {b:.1f} -> {n:.1f} us/call "
+                   f"({n / b:.2f}x, tolerance {1.0 + tolerance:.2f}x)")
+            (hard if timing_hard else warn).append(msg)
 
-    for tag, t in rows:
-        d = ""
-        if base is not None and tag != "baseline":
-            d = (f"  Δcoll {t['collective'] / base['collective'] - 1:+.0%}"
-                 f"  Δfrac {t['roofline_frac'] / base['roofline_frac']:.2f}x")
-        print(f"{tag:10s} comp {t['compute']:.3e}  mem {t['memory']:.3e}  "
-              f"coll {t['collective']:.3e}  dom={t['dominant']:10s} "
-              f"frac={t['roofline_frac']:.3f}  devGB={t['mem_gb']:.1f}{d}")
-        print(f"           colls: {t['coll_detail_gb']}")
+    base_hr, new_hr = cache_hit_rate(base), cache_hit_rate(new)
+    if base_hr is not None and new_hr is not None:
+        if new_hr < base_hr - hard_tolerance:
+            hard.append(
+                f"cache hit rate dropped: {base_hr:.3f} -> {new_hr:.3f} "
+                f"(allowed drop {hard_tolerance})")
+    elif base_hr is not None:
+        hard.append("cache hit/miss counters missing from new run")
+
+    base_w, new_w = (_gauge(base, "engine.padding_waste"),
+                     _gauge(new, "engine.padding_waste"))
+    if base_w is not None and new_w is not None:
+        if new_w > base_w + hard_tolerance:
+            hard.append(
+                f"engine padding waste increased: {base_w:.3f} -> "
+                f"{new_w:.3f} (allowed increase {hard_tolerance})")
+    elif base_w is not None:
+        hard.append("engine.padding_waste gauge missing from new run")
+
+    return hard, warn
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff a BENCH json against a committed baseline")
+    ap.add_argument("new", help="fresh BENCH_*.json from this run")
+    ap.add_argument("--against", required=True,
+                    help="committed baseline BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="allowed fractional us_per_call increase "
+                         "(default 0.5 = 1.5x; warn-only unless "
+                         "--timing-hard)")
+    ap.add_argument("--hard-tolerance", type=float, default=0.02,
+                    help="allowed absolute drop in cache hit rate / "
+                         "increase in padding waste (default 0.02)")
+    ap.add_argument("--timing-hard", action="store_true",
+                    help="fail (not warn) on timing regressions -- for "
+                         "quiet dedicated runners")
+    args = ap.parse_args(argv)
+
+    base = _load(args.against)
+    new = _load(args.new)
+    if base is None or new is None:
+        return 2
+
+    hard, warn = compare(base, new, tolerance=args.tolerance,
+                         hard_tolerance=args.hard_tolerance,
+                         timing_hard=args.timing_hard)
+    for msg in warn:
+        print(f"WARN: {msg}")
+    for msg in hard:
+        print(f"FAIL: {msg}")
+    n_rows = len(base["rows"])
+    if hard:
+        print(f"compare: {len(hard)} hard failure(s), "
+              f"{len(warn)} warning(s) over {n_rows} baseline rows")
+        return 1
+    print(f"compare: OK ({n_rows} baseline rows, {len(warn)} warning(s))")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

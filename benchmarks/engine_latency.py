@@ -1,0 +1,100 @@
+"""Serving-latency benchmark: ``TrajectoryEngine`` tracks/sec and
+per-record latency percentiles.
+
+The paper's axis is per-problem span; the serving question is different:
+how many concurrent tracks does one engine drain, and what does one
+submitted record wait end-to-end?  This drives a deterministic ragged
+workload (fixed seed, fixed length mix spanning several pad buckets)
+through ``TrajectoryEngine`` twice -- a warmup drain that compiles the
+per-bucket executables, then the measured drain running entirely on
+cache hits -- and reports tracks/sec (measured drain) plus the p50/p99
+of the ``engine.record_latency_seconds`` obs histogram (submit-to-done
+wall time per record; the histogram covers both drains, so p99 exposes
+compile-inflated first-wave latency while p50 reflects steady state).
+
+The padding-waste and cache-hit-rate numbers this workload feeds into
+``repro.obs.snapshot()`` are deterministic, which is what lets
+``benchmarks/compare.py`` hard-gate them in CI while timing stays
+warn-only.
+
+    PYTHONPATH=src python benchmarks/engine_latency.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import numpy as np
+
+
+def _records(lengths, ny, rng):
+    out = []
+    for n in lengths:
+        ts = np.linspace(0.0, n / 32.0, n + 1, dtype=np.float32)
+        y = rng.standard_normal((n, ny)).astype(np.float32)
+        out.append((ts, y))
+    return out
+
+
+def run(smoke=False, batch=8, nsub=10, mode="discrete",
+        method="parallel_rts", seed=0):
+    import repro.obs as obs
+    from repro.configs.wiener_velocity import WienerVelocityConfig
+    from repro.core import get_method
+    from repro.serving import TrajectoryEngine
+
+    wcfg = WienerVelocityConfig(p0=1.0)
+    model = wcfg.model()
+    if smoke:
+        batch = 4
+        # two pad buckets (20 and 40 intervals at nsub=10)
+        lengths = [12, 25, 18, 33, 14, 40, 20, 27]
+    else:
+        lengths = list(np.random.default_rng(seed).choice(
+            [80, 120, 160, 250, 320, 500], size=64))
+    rng = np.random.default_rng(seed)
+    ny = np.asarray(model.H).shape[0]      # constant H in this config
+    recs = _records(lengths, ny, rng)
+
+    options = get_method(method).options_cls.from_legacy(
+        nsub=nsub, mode=mode)
+    engine = TrajectoryEngine(model, batch=batch, method=method,
+                              options=options)
+    engine.estimate(recs)               # warmup: compiles every bucket
+
+    t0 = time.perf_counter()
+    engine.estimate(recs)               # measured: cache hits only
+    dt = time.perf_counter() - t0
+
+    derived = f"tracks_per_sec={len(recs) / dt:.1f}"
+    if obs.enabled():
+        lat = obs.histogram("engine.record_latency_seconds").summary()
+        if lat.get("count"):
+            derived += (f",p50_ms={lat['p50'] * 1e3:.2f}"
+                        f",p99_ms={lat['p99'] * 1e3:.2f}")
+        waste = obs.gauge("engine.padding_waste").value
+        derived += f",waste={waste:.3f}"
+    return [{
+        "name": f"serve/engine/B{batch}_R{len(recs)}",
+        "us_per_call": dt / len(recs) * 1e6,
+        "derived": derived,
+    }]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload (CI bit-rot check)")
+    args = ap.parse_args()
+    import repro.obs as obs
+    obs.enable()
+    for r in run(smoke=args.smoke):
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,19 @@ from repro.config import ModelConfig, ShapeConfig
 BYTES = {"bfloat16": 2, "float32": 4}
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """Normalise ``compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns a per-computation list/tuple of dicts (entry 0 is
+    the entry computation); newer jax returns the dict directly.  Returns
+    ``{}`` when the backend reports nothing.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
+
+
 @dataclasses.dataclass(frozen=True)
 class CostBreakdown:
     flops: float              # global flops per step

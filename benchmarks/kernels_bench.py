@@ -113,8 +113,23 @@ def run(smoke=False):
 
 
 def main():
-    for r in run():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write a BENCH json artifact for this section")
+    args = ap.parse_args()
+    import repro.obs as obs
+    if args.json:
+        obs.enable()
+        obs.reset()
+    rows = run(smoke=args.smoke)
+    for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    if args.json:
+        obs.write_bench_json(
+            args.json, obs.bench_record("kern", rows, seeds={"kern": 0}))
 
 
 if __name__ == "__main__":

@@ -1,12 +1,19 @@
 """Benchmark harness entry point -- one section per paper figure/table.
 
-Prints ``name,us_per_call,derived`` CSV lines.
+Prints ``name,us_per_call,derived`` CSV lines; with ``--json PATH`` also
+writes the schema-versioned ``BENCH_<name>.json`` artifact (rows + RNG
+seeds + environment fingerprint + the full ``repro.obs`` snapshot --
+cache hit/miss, compile seconds, solve-phase spans, engine latency
+percentiles, padding waste).  CI's ``bench-baseline`` job runs
+``--smoke --json BENCH_smoke.json`` and diffs the artifact against the
+committed ``benchmarks/baselines/BENCH_seed.json`` with
+``benchmarks/compare.py`` (see docs/OBSERVABILITY.md).
 
   fig1/*    paper Fig. 1  (linear Wiener velocity, seq vs parallel)
   fig2/*    paper Fig. 2  (coordinated-turn iterated MAP)
   kern/*    kernel micro-benchmarks
   batch/*   request-axis throughput (problems/sec vs batch size)
-  scan/*    distributed-scan span scaling (single-process proxy)
+  serve/*   TrajectoryEngine tracks/sec + latency percentiles
 
 ``--fast`` shrinks the sweeps (CI-sized); ``--smoke`` shrinks further to
 bit-rot-check sizes (every section runs in seconds); default runs the full
@@ -20,6 +27,10 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
+# fixed RNG seeds per section -- recorded into the JSON artifact so every
+# number is reproducible from the file alone
+SEEDS = {"fig1": 0, "fig2": 1, "kern": 0, "batch": 0, "serve": 0}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -27,13 +38,21 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes: CI bit-rot check for every section")
     ap.add_argument("--only", default="",
-                    help="comma list: fig1,fig2,kern,batch")
+                    help="comma list: fig1,fig2,kern,batch,serve")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write the BENCH_<name>.json artifact here "
+                         "(CI: BENCH_smoke.json)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
+    import repro.obs as obs
+    obs.enable()
+    obs.reset()
+
     rows = []
     from benchmarks import (
-        batch_throughput, fig1_linear, fig2_nonlinear, kernels_bench,
+        batch_throughput, engine_latency, fig1_linear, fig2_nonlinear,
+        kernels_bench,
     )
     if only is None or "fig1" in only:
         if args.smoke:
@@ -54,9 +73,17 @@ def main() -> None:
         rows += kernels_bench.run(smoke=args.smoke)
     if only is None or "batch" in only:
         rows += batch_throughput.run(smoke=args.smoke or args.fast)
+    if only is None or "serve" in only:
+        rows += engine_latency.run(smoke=args.smoke or args.fast)
 
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+    if args.json:
+        name = "smoke" if args.smoke else ("fast" if args.fast else "full")
+        record = obs.bench_record(name, rows, seeds=SEEDS)
+        path = obs.write_bench_json(args.json, record)
+        print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

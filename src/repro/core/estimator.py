@@ -32,11 +32,15 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
 
 from .nonlinear import iterated_solve
 from .options import IteratedOptions, SolverOptions
@@ -69,33 +73,53 @@ class ExecutableCache:
     bounds retained executables/models: callers constructing a fresh model
     per request never hit (new id each time) and would otherwise grow the
     cache without bound -- reuse one model object to get executable reuse.
+
+    Hit/miss/eviction counts are kept as plain ints (always, they cost
+    nothing) and mirrored into the ``repro.obs`` registry counters
+    ``cache.hits`` / ``cache.misses`` / ``cache.evictions`` while obs is
+    enabled (aggregated across all cache instances -- the module default
+    plus any private ``Estimator(cache=...)`` caches).
     """
 
     def __init__(self, maxsize: int = 128) -> None:
         self._entries: "collections.OrderedDict[tuple, tuple]" = (
             collections.OrderedDict())
+        self._lock = threading.RLock()
         self.maxsize = maxsize
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+
+    def get_entry(self, model: Model, mesh, key_tail: tuple, build):
+        """Fetch-or-build; returns ``(fn, fresh)`` where ``fresh`` marks a
+        miss (``fn`` was just built and has not executed/compiled yet)."""
+        key = (id(model), None if mesh is None else id(mesh)) + key_tail
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self.hits += 1
+                self._entries.move_to_end(key)
+                obs.inc("cache.hits")
+                return entry[0], False
+            self.misses += 1
+            obs.inc("cache.misses")
+            fn = build()
+            self._entries[key] = (fn, model, mesh)
+            if len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+                obs.inc("cache.evictions")
+            return fn, True
 
     def get(self, model: Model, mesh, key_tail: tuple, build):
-        key = (id(model), None if mesh is None else id(mesh)) + key_tail
-        entry = self._entries.get(key)
-        if entry is not None:
-            self.hits += 1
-            self._entries.move_to_end(key)
-            return entry[0]
-        self.misses += 1
-        fn = build()
-        self._entries[key] = (fn, model, mesh)
-        if len(self._entries) > self.maxsize:
-            self._entries.popitem(last=False)
-        return fn
+        return self.get_entry(model, mesh, key_tail, build)[0]
 
     def clear(self) -> None:
-        self._entries.clear()
-        self.hits = 0
-        self.misses = 0
+        with self._lock:
+            self._entries.clear()
+            self.hits = 0
+            self.misses = 0
+            self.evictions = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -106,8 +130,16 @@ _CACHE = ExecutableCache()
 
 def cache_stats() -> Dict[str, int]:
     """Default executable-cache counters: one miss per compiled (layout,
-    method, options) combination, hits for every reuse."""
-    return {"size": len(_CACHE), "hits": _CACHE.hits, "misses": _CACHE.misses}
+    method, options) combination, hits for every reuse, evictions when
+    ``maxsize`` forces an LRU drop.
+
+    These are the same counts the obs registry exports as ``cache.*``
+    (aggregated over every cache instance) -- ``repro.obs.snapshot()``
+    additionally carries the ``cache.compile_seconds`` histogram recorded
+    around fresh-executable first runs.  See docs/OBSERVABILITY.md.
+    """
+    return {"size": len(_CACHE), "hits": _CACHE.hits,
+            "misses": _CACHE.misses, "evictions": _CACHE.evictions}
 
 
 def clear_cache() -> None:
@@ -305,7 +337,7 @@ def _solve_arrays(model: Model, spec: MethodSpec, options, ts, y, mask,
     """
     if isinstance(model, NonlinearSDE):
         inner = options.inner
-        sol, trace = iterated_solve(
+        sol, trace, steps = iterated_solve(
             model, ts, y, lambda grid: spec.solver(grid, inner),
             iterations=options.iterations,
             divergence_correction=options.divergence_correction,
@@ -314,7 +346,7 @@ def _solve_arrays(model: Model, spec: MethodSpec, options, ts, y, mask,
         if not diagnostics:
             return Solution(x=sol.x, S=sol.S, v=sol.v, cov=sol.cov)
         return Solution(x=sol.x, S=sol.S, v=sol.v, cov=sol.cov,
-                        cost=trace[-1], cost_trace=trace)
+                        cost=trace[-1], cost_trace=trace, step_norms=steps)
     grid = grid_lqt_from_linear(model, ts, y, measurement_mask=mask)
     sol = spec.solver(grid, options)
     return Solution(x=sol.x, S=sol.S, v=sol.v, cov=sol.cov,
@@ -427,7 +459,8 @@ class Estimator:
 
     def _prepare(self, problem: Problem):
         """Fetch/compile the executable for this problem's layout; returns
-        ``(jitted_fn, args)``."""
+        ``(jitted_fn, args, fresh)`` -- ``fresh`` marks a cache miss (the
+        executable compiles on its first run)."""
         self._check_model(problem)
         ts, y = problem.ts, problem.y
         mask, x_init = problem.measurement_mask, problem.x_init
@@ -486,8 +519,8 @@ class Estimator:
                         tuple(ax == 0 for ax in axes))
             return jax.jit(fn)
 
-        fn = self._cache.get(model, self.mesh, key_tail, build)
-        return fn, tuple(args)
+        fn, fresh = self._cache.get_entry(model, self.mesh, key_tail, build)
+        return fn, tuple(args), fresh
 
     # -- public surface -----------------------------------------------------
 
@@ -499,11 +532,52 @@ class Estimator:
         per-record ``Solution``\\ s in submission order (ragged layout,
         each carrying the shared
         :class:`~repro.core.types.PaddingReport`).
+
+        While ``repro.obs`` is enabled (and ``diagnostics`` is on -- the
+        hot-serving opt-out also silences instrumentation) the solve is
+        measured: phase spans ``estimator.solve.{prepare,compile,execute,
+        host_transfer}``, the ``cache.compile_seconds`` histogram for
+        fresh executables, and nonlinear iteration metrics.  The measured
+        path blocks on the result (spans time real work, not dispatch);
+        outputs are bit-exact either way.
         """
         if problem.kind == "ragged":
             return self._solve_ragged(problem)
-        fn, args = self._prepare(problem)
-        return fn(*args)
+        if not (self.diagnostics and obs.enabled()):
+            # hot path: no obs objects touched, fully async dispatch
+            fn, args, _ = self._prepare(problem)
+            return fn(*args)
+        with obs.trace_span("estimator.solve"):
+            with obs.trace_span("estimator.solve.prepare"):
+                fn, args, fresh = self._prepare(problem)
+            phase = ("estimator.solve.compile" if fresh
+                     else "estimator.solve.execute")
+            t0 = time.perf_counter()
+            with obs.trace_span(phase, xla=True):
+                out = fn(*args)
+                jax.block_until_ready(out)
+            if fresh:
+                obs.record("cache.compile_seconds",
+                           time.perf_counter() - t0)
+            with obs.trace_span("estimator.solve.host_transfer"):
+                self._record_solution_metrics(out)
+        return out
+
+    def _record_solution_metrics(self, sol: Solution) -> None:
+        """Host-side readout of per-solve diagnostics into the registry
+        (concrete device arrays only -- never called from traced code)."""
+        obs.inc("estimator.solves")
+        if sol.cost is not None:
+            obs.record("estimator.final_cost", np.mean(np.asarray(sol.cost)))
+        if sol.cost_trace is not None:
+            trace = np.asarray(sol.cost_trace)
+            obs.set_gauge("nonlinear.iterations", trace.shape[-1])
+            obs.record("nonlinear.cost_decrease",
+                       float(np.mean(trace[..., 0] - trace[..., -1])))
+        if sol.step_norms is not None:
+            steps = np.asarray(sol.step_norms)
+            obs.record("nonlinear.final_step_norm",
+                       float(np.mean(steps[..., -1])))
 
     def lower(self, problem: Problem) -> "jax.stages.Lowered":
         """Ahead-of-time path: the ``jax.stages.Lowered`` for this
@@ -515,8 +589,9 @@ class Estimator:
             raise ValueError(
                 "lower() supports single/stacked problems; a ragged solve "
                 "composes one executable per bucket")
-        fn, args = self._prepare(problem)
-        return fn.lower(*args)
+        with obs.trace_span("estimator.lower"):
+            fn, args, _ = self._prepare(problem)
+            return fn.lower(*args)
 
     # -- ragged pad-and-bucket ---------------------------------------------
 
@@ -561,4 +636,12 @@ class Estimator:
                 out[i] = slice_solution(sol, row, lengths[i])
 
         report = PaddingReport(lengths=tuple(lengths), buckets=tuple(infos))
+        if self.diagnostics and obs.enabled():
+            obs.inc("padding.records", report.records)
+            obs.inc("padding.real_intervals", report.real_intervals)
+            obs.inc("padding.solved_intervals", report.solved_intervals)
+            obs.set_gauge("padding.interval_utilisation",
+                          report.interval_utilisation)
+            obs.set_gauge("padding.row_utilisation", report.row_utilisation)
+            obs.set_gauge("padding.waste", 1.0 - report.interval_utilisation)
         return [dataclasses.replace(s, padding=report) for s in out]

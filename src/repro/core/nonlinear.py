@@ -56,12 +56,15 @@ def iterated_solve(
     ``measurement_mask`` (``(N,)`` of 0/1) zeroes masked measurement
     intervals in every linearisation pass (padding / missing data).
 
-    Returns ``(solution, cost_trace)`` where ``cost_trace[i]`` is the true
-    (nonlinear) Onsager-Machlup cost of the iterate produced by pass
-    ``i+1`` -- the Gauss-Newton descent curve; ``cost_trace[-1]`` is the
-    cost of the returned solution.  ``track_costs=False`` skips the cost
-    evaluations (returning ``(solution, None)``) -- one model f/h sweep
-    plus Q/R inversions saved per iteration.
+    Returns ``(solution, cost_trace, step_norms)`` where ``cost_trace[i]``
+    is the true (nonlinear) Onsager-Machlup cost of the iterate produced
+    by pass ``i+1`` -- the Gauss-Newton descent curve; ``cost_trace[-1]``
+    is the cost of the returned solution.  ``step_norms[i]`` is the RMS
+    update norm ``sqrt(mean((x_{i+1} - x_i)^2))`` of pass ``i+1`` -- the
+    convergence indicator surfaced as ``Solution.step_norms`` (and into
+    the ``repro.obs`` registry by the Estimator).  ``track_costs=False``
+    skips both trace evaluations (returning ``(solution, None, None)``)
+    -- one model f/h sweep plus Q/R inversions saved per iteration.
     """
     N = y.shape[0]
     if x_init is None:
@@ -74,25 +77,33 @@ def iterated_solve(
             model, ts, y, x, divergence_correction=divergence_correction,
             measurement_mask=measurement_mask)
 
+    def step_norm(x_new, x_old):
+        return jnp.sqrt(jnp.mean(jnp.square(x_new - x_old)))
+
     def body(xbar, _):
         grid = grid_lqt_from_nonlinear(
             model, ts, y, xbar, divergence_correction=divergence_correction,
             measurement_mask=measurement_mask)
         sol = solver(grid)
-        return sol.x, (cost_of(sol.x) if track_costs else None)
+        aux = ((cost_of(sol.x), step_norm(sol.x, xbar))
+               if track_costs else None)
+        return sol.x, aux
 
     # iterations-1 passes inside lax.scan (keeps the compiled graph O(1) in
     # iteration count), plus one final pass returning the full solution --
     # ``iterations`` linearise+solve passes total, matching the paper.
-    x_last, costs = jax.lax.scan(body, x_init, None, length=iterations - 1)
+    x_last, aux = jax.lax.scan(body, x_init, None, length=iterations - 1)
     grid = grid_lqt_from_nonlinear(
         model, ts, y, x_last, divergence_correction=divergence_correction,
         measurement_mask=measurement_mask)
     sol = solver(grid)
     if not track_costs:
-        return sol, None
+        return sol, None, None
+    costs, steps = aux
     trace = jnp.concatenate([costs, cost_of(sol.x)[None]], axis=0)
-    return sol, trace
+    step_norms = jnp.concatenate(
+        [steps, step_norm(sol.x, x_last)[None]], axis=0)
+    return sol, trace, step_norms
 
 
 def iterated_map(

@@ -99,6 +99,7 @@ def slice_solution(
             x=take(sol.x), S=take(sol.S), v=take(sol.v), cov=take(sol.cov),
             cost=per_record(sol.cost),
             cost_trace=per_record(sol.cost_trace),
+            step_norms=per_record(sol.step_norms),
             padding=sol.padding)
     return MAPSolution(x=take(sol.x), S=take(sol.S), v=take(sol.v),
                        cov=take(sol.cov))

@@ -176,8 +176,10 @@ class Solution:
     objective the MAP estimate minimises); for nonlinear solves
     ``cost_trace`` holds the cost after each linearise-and-solve pass
     (``cost == cost_trace[..., -1]``), the Gauss-Newton descent curve of
-    the iterated smoother.  ``padding`` (static metadata) is only present
-    on solutions of ragged problems.
+    the iterated smoother, and ``step_norms`` the RMS update norm
+    ``||x_{i+1} - x_i||_rms`` of each pass (the iterated smoother's
+    convergence indicator).  ``padding`` (static metadata) is only
+    present on solutions of ragged problems.
     """
 
     x: jnp.ndarray                         # (..., N+1, nx) MAP trajectory
@@ -186,11 +188,12 @@ class Solution:
     cov: Optional[jnp.ndarray] = None      # (..., N+1, nx, nx) smoothing cov
     cost: Optional[jnp.ndarray] = None     # (...,) Onsager-Machlup cost
     cost_trace: Optional[jnp.ndarray] = None  # (..., iterations)
+    step_norms: Optional[jnp.ndarray] = None  # (..., iterations)
     padding: Optional[PaddingReport] = None   # static; ragged solves only
 
 
 jax.tree_util.register_dataclass(
     Solution,
-    data_fields=["x", "S", "v", "cov", "cost", "cost_trace"],
+    data_fields=["x", "S", "v", "cov", "cost", "cost_trace", "step_norms"],
     meta_fields=["padding"],
 )

@@ -22,6 +22,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.types import LQTElement
 
 from .kernel import lqt_combine_lanes
@@ -61,12 +62,22 @@ def _combine_lanes(ops1, ops2, *, block_b: int, interpret: bool):
     Pads both operand tuples to a ``block_b`` multiple (zero lanes are
     garbage-free: C1 J2 = 0 so the Gauss-Jordan pivots stay 1) and slices
     the pad back off.  ``B == 0`` (empty tree levels) short-circuits.
+
+    Obs: each call increments the ``kernel.lqt_combine.*`` launch
+    counters.  These run at TRACE time (shapes are static ints, no tracer
+    is captured), so they count kernel call sites emitted into the
+    compiled program -- i.e. launches per execution of one compiled scan;
+    cached executables do not re-count on reuse.
     """
     B = ops1[0].shape[-1]
     if B == 0:
         return ops1
     bb = min(block_b, max(8, B))
     pad = (-B) % bb
+    if obs.enabled():
+        obs.inc("kernel.lqt_combine.launches")
+        obs.inc("kernel.lqt_combine.lanes", B)
+        obs.inc("kernel.lqt_combine.pad_lanes", pad)
     out = lqt_combine_lanes(_pad_lanes(ops1, pad), _pad_lanes(ops2, pad),
                             block_b=bb, interpret=interpret)
     return tuple(a[..., :B] for a in out)

@@ -253,6 +253,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            # older jax returns a per-computation list of dicts
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
             coll = _collective_bytes(hlo)
             # archive the optimised HLO for offline re-analysis

@@ -1,0 +1,125 @@
+"""Wall-time span trees: ``trace_span("estimator.solve.compile")``.
+
+Spans nest per-thread; a completed ROOT span (no open parent on this
+thread) is appended to a bounded ring, readable via :func:`span_trees`.
+Every span additionally records its duration into the histogram
+``span.<name>`` so :func:`repro.obs.snapshot` reports per-phase
+percentiles without walking trees.
+
+Two XLA passthroughs connect host spans to device profiles:
+
+* ``trace_span(name, xla=True)`` wraps the body in
+  ``jax.profiler.TraceAnnotation(name)`` so the span shows up on the
+  host timeline of an XLA/Perfetto profile;
+* :func:`xla_profile` brackets a block with ``jax.profiler.start_trace``
+  / ``stop_trace`` (TensorBoard/Perfetto dump).
+
+Both degrade to no-ops when ``jax`` (or the profiler) is unavailable --
+this module never hard-imports jax.
+
+Instrument OUTSIDE ``jit``: a span measures host wall time, so wrapping
+traced code times tracing, not execution.  (Span durations are plain
+floats from ``perf_counter``; no traced value is ever captured.)
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from contextlib import contextmanager
+from typing import List, Optional
+
+from . import metrics
+
+_MAX_ROOTS = 64
+_roots: "collections.deque" = collections.deque(maxlen=_MAX_ROOTS)
+_roots_lock = threading.Lock()
+_local = threading.local()
+
+
+class Span:
+    """One timed region: name, start, duration, child spans."""
+
+    __slots__ = ("name", "t0", "dur_s", "children")
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self.t0 = time.perf_counter()
+        self.dur_s = 0.0
+        self.children: List["Span"] = []
+
+    def as_dict(self) -> dict:
+        d = {"name": self.name, "dur_s": self.dur_s}
+        if self.children:
+            d["children"] = [c.as_dict() for c in self.children]
+        return d
+
+
+@contextmanager
+def trace_span(name: str, xla: bool = False):
+    """Time a region as a span under the current thread's open span (if
+    any).  No-op (and allocation-free) while obs is disabled."""
+    if not metrics.enabled():
+        yield None
+        return
+    ann = None
+    if xla:
+        try:
+            from jax.profiler import TraceAnnotation
+            ann = TraceAnnotation(name)
+            ann.__enter__()
+        except Exception:
+            ann = None
+    stack = getattr(_local, "stack", None)
+    if stack is None:
+        stack = _local.stack = []
+    span = Span(name)
+    parent: Optional[Span] = stack[-1] if stack else None
+    stack.append(span)
+    try:
+        yield span
+    finally:
+        span.dur_s = time.perf_counter() - span.t0
+        if stack and stack[-1] is span:
+            stack.pop()
+        if ann is not None:
+            ann.__exit__(None, None, None)
+        if parent is not None:
+            parent.children.append(span)
+        else:
+            with _roots_lock:
+                _roots.append(span)
+        metrics.record(f"span.{name}", span.dur_s)
+
+
+def span_trees() -> List[dict]:
+    """The most recent completed root spans (oldest first) as nested
+    ``{"name", "dur_s", "children"}`` dicts."""
+    with _roots_lock:
+        return [s.as_dict() for s in _roots]
+
+
+def reset() -> None:
+    with _roots_lock:
+        _roots.clear()
+
+
+@contextmanager
+def xla_profile(logdir: str):
+    """Bracket a block with ``jax.profiler.start_trace(logdir)`` /
+    ``stop_trace`` -- spans entered with ``xla=True`` inside the block
+    appear on the profile's host timeline.  No-op if the profiler is
+    unavailable."""
+    started = False
+    try:
+        import jax.profiler
+        jax.profiler.start_trace(logdir)
+        started = True
+    except Exception:
+        pass
+    try:
+        yield
+    finally:
+        if started:
+            import jax.profiler
+            jax.profiler.stop_trace()

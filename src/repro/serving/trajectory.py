@@ -33,12 +33,14 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 import warnings
 from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.estimator import Estimator, Problem, legacy_options
 from repro.core.padding import bucket_length, pad_record, slice_solution
 from repro.core.sde import LinearSDE, NonlinearSDE
@@ -51,6 +53,7 @@ class _Pending:
     ts: np.ndarray
     y: np.ndarray
     n_pad: int
+    submit_t: float = 0.0   # perf_counter at submit; queue-to-collect latency
 
 
 class TrajectoryEngine:
@@ -129,7 +132,11 @@ class TrajectoryEngine:
         self._next_ticket += 1
         n_pad = bucket_length(y.shape[0], self.estimator.block_size,
                               self.bucket_sizes)
-        self._queue.append(_Pending(ticket, ts, y, n_pad))
+        self._queue.append(
+            _Pending(ticket, ts, y, n_pad, time.perf_counter()))
+        if obs.enabled():
+            obs.inc("engine.submitted")
+            obs.set_gauge("engine.queue_depth", len(self._queue))
         return ticket
 
     def pending(self) -> int:
@@ -163,30 +170,71 @@ class TrajectoryEngine:
 
     def step(self) -> int:
         """Solve one fixed-size wave; returns the number of requests
-        completed (0 if the queue is empty)."""
+        completed (0 if the queue is empty).
+
+        With ``repro.obs`` enabled each wave reports: occupancy (real
+        rows / batch), padding waste (padded vs real intervals), queue
+        depth, and per-record submit-to-done latency percentiles
+        (``engine.record_latency_seconds``)."""
         if not self._queue:
             return 0
-        wave = self._take_wave()
-        n_pad = wave[0].n_pad
-        padded = [pad_record(r.ts, r.y, n_pad) for r in wave]
-        rows = padded + [padded[0]] * (self.batch - len(padded))
-        self.recycled_rows += self.batch - len(padded)
-        ts_b = jnp.asarray(np.stack([r[0] for r in rows]))
-        ys_b = jnp.asarray(np.stack([r[1] for r in rows]))
-        mask_b = jnp.asarray(np.stack([r[2] for r in rows]))
-        sol = self.estimator.solve(
-            Problem.stacked(self.model, ts_b, ys_b,
-                            measurement_mask=mask_b))
-        self.waves += 1
-        for row, req in enumerate(wave):
-            self._done[req.ticket] = slice_solution(sol, row, req.y.shape[0])
+        with obs.trace_span("engine.step"):
+            wave = self._take_wave()
+            n_pad = wave[0].n_pad
+            padded = [pad_record(r.ts, r.y, n_pad) for r in wave]
+            rows = padded + [padded[0]] * (self.batch - len(padded))
+            self.recycled_rows += self.batch - len(padded)
+            ts_b = jnp.asarray(np.stack([r[0] for r in rows]))
+            ys_b = jnp.asarray(np.stack([r[1] for r in rows]))
+            mask_b = jnp.asarray(np.stack([r[2] for r in rows]))
+            sol = self.estimator.solve(
+                Problem.stacked(self.model, ts_b, ys_b,
+                                measurement_mask=mask_b))
+            self.waves += 1
+            for row, req in enumerate(wave):
+                self._done[req.ticket] = slice_solution(
+                    sol, row, req.y.shape[0])
+            if obs.enabled():
+                self._record_wave_metrics(wave, n_pad)
         return len(wave)
 
+    def _record_wave_metrics(self, wave: List[_Pending],
+                             n_pad: int) -> None:
+        now = time.perf_counter()
+        real = sum(r.y.shape[0] for r in wave)
+        solved = n_pad * self.batch
+        obs.inc("engine.waves")
+        obs.inc("engine.completed", len(wave))
+        obs.inc("engine.recycled_rows", self.batch - len(wave))
+        obs.inc("engine.real_intervals", real)
+        obs.inc("engine.padded_intervals", solved)
+        obs.record("engine.wave_occupancy", len(wave) / self.batch,
+                   buckets=[i / 20 for i in range(21)])
+        # cumulative padding waste: fraction of solved intervals that were
+        # padding or recycled rows (0 = perfect packing)
+        c = obs.REGISTRY.counter
+        total_real = c("engine.real_intervals").value
+        total_solved = c("engine.padded_intervals").value
+        if total_solved:
+            obs.set_gauge("engine.padding_waste",
+                          1.0 - total_real / total_solved)
+        obs.set_gauge("engine.queue_depth", len(self._queue))
+        for req in wave:
+            obs.record("engine.record_latency_seconds", now - req.submit_t)
+
     def run(self) -> int:
-        """Drain the queue; returns the total number of requests solved."""
+        """Drain the queue; returns the total number of requests solved.
+
+        With ``repro.obs`` enabled, sets ``engine.tracks_per_sec`` (drain
+        throughput of this call)."""
         total = 0
-        while self._queue:
-            total += self.step()
+        t0 = time.perf_counter()
+        with obs.trace_span("engine.run"):
+            while self._queue:
+                total += self.step()
+        dt = time.perf_counter() - t0
+        if total and dt > 0:
+            obs.set_gauge("engine.tracks_per_sec", total / dt)
         return total
 
     # -- synchronous convenience --------------------------------------------

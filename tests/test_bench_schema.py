@@ -1,0 +1,166 @@
+"""The BENCH_*.json artifact schema and the benchmarks/compare.py
+regression gate: schema validation, the committed seed baseline, and the
+gate's warn/fail split (timing warn-only, cache-hit-rate and
+padding-waste hard-fail).
+
+These tests are pure-python (no solver runs): the gate logic must be
+checkable without paying a benchmark run.
+"""
+import copy
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.compare import cache_hit_rate, compare, main as compare_main
+from repro import obs
+
+
+def make_record(**over):
+    """A minimal valid schema-v1 record with deterministic obs metrics."""
+    rec = {
+        "schema_version": obs.SCHEMA_VERSION,
+        "benchmark": "smoke",
+        "seeds": {"fig1": 0, "serve": 0},
+        "env": {"python": "3.x", "jax": "0.0"},
+        "rows": [
+            {"name": "fig1/seq/T16", "us_per_call": 100.0, "derived": "s=1"},
+            {"name": "serve/engine/B4_R8", "us_per_call": 2000.0,
+             "derived": "tracks_per_sec=100"},
+        ],
+        "obs": {
+            "counters": {"cache.hits": 8, "cache.misses": 2},
+            "gauges": {"engine.padding_waste": 0.20},
+            "histograms": {},
+            "dropped_records": 0,
+        },
+    }
+    rec.update(over)
+    return rec
+
+
+# -- schema validation ------------------------------------------------------
+
+
+def test_valid_record_passes():
+    assert obs.validate_bench(make_record()) == []
+
+
+def test_bench_record_builder_is_valid():
+    rows = [{"name": "a/b", "us_per_call": 1.5, "derived": "x=1"}]
+    rec = obs.bench_record("unit", rows, seeds={"a": 0})
+    assert obs.validate_bench(rec) == []
+    assert rec["schema_version"] == obs.SCHEMA_VERSION
+    assert rec["rows"][0]["us_per_call"] == 1.5
+    assert "env" in rec and "obs" in rec
+
+
+@pytest.mark.parametrize("mutate, fragment", [
+    (lambda r: r.update(schema_version=99), "schema_version"),
+    (lambda r: r.pop("rows"), "rows"),
+    (lambda r: r.pop("env"), "env"),
+    (lambda r: r["rows"][0].pop("us_per_call"), "us_per_call"),
+    (lambda r: r["obs"].pop("counters"), "obs.counters"),
+])
+def test_invalid_records_are_rejected(mutate, fragment):
+    rec = make_record()
+    mutate(rec)
+    problems = obs.validate_bench(rec)
+    assert problems
+    assert any(fragment in p for p in problems)
+
+
+def test_write_bench_json_round_trips_and_validates(tmp_path):
+    path = tmp_path / "sub" / "BENCH_unit.json"
+    obs.write_bench_json(str(path), make_record())
+    assert obs.validate_bench(json.loads(path.read_text())) == []
+    with pytest.raises(ValueError, match="invalid benchmark record"):
+        obs.write_bench_json(str(path), {"schema_version": 99})
+
+
+def test_committed_seed_baseline_is_valid():
+    """The baseline CI gates against must always satisfy the schema and
+    carry the deterministic hard-gate metrics."""
+    path = (Path(__file__).resolve().parent.parent
+            / "benchmarks" / "baselines" / "BENCH_seed.json")
+    rec = json.loads(path.read_text())
+    assert obs.validate_bench(rec) == []
+    assert cache_hit_rate(rec) is not None
+    assert "engine.padding_waste" in rec["obs"]["gauges"]
+    assert any(r["name"].startswith("serve/") for r in rec["rows"])
+
+
+# -- the regression gate ----------------------------------------------------
+
+
+def test_compare_identical_records_pass():
+    base = make_record()
+    hard, warn = compare(base, copy.deepcopy(base),
+                         tolerance=0.5, hard_tolerance=0.02)
+    assert hard == [] and warn == []
+
+
+def test_timing_regression_warns_only():
+    base = make_record()
+    new = copy.deepcopy(base)
+    new["rows"][0]["us_per_call"] *= 2.0          # 2x > 1.5x tolerance
+    hard, warn = compare(base, new, tolerance=0.5, hard_tolerance=0.02)
+    assert hard == []
+    assert len(warn) == 1 and "timing regression" in warn[0]
+    # --timing-hard upgrades the same finding to a failure
+    hard, warn = compare(base, new, tolerance=0.5, hard_tolerance=0.02,
+                         timing_hard=True)
+    assert len(hard) == 1 and warn == []
+
+
+def test_cache_hit_rate_drop_hard_fails():
+    base = make_record()
+    new = copy.deepcopy(base)
+    new["obs"]["counters"]["cache.hits"] = 5      # 0.8 -> 0.714
+    hard, _ = compare(base, new, tolerance=0.5, hard_tolerance=0.02)
+    assert any("cache hit rate" in m for m in hard)
+    # within hard_tolerance: no failure
+    hard, _ = compare(base, new, tolerance=0.5, hard_tolerance=0.2)
+    assert hard == []
+
+
+def test_padding_waste_increase_hard_fails():
+    base = make_record()
+    new = copy.deepcopy(base)
+    new["obs"]["gauges"]["engine.padding_waste"] = 0.30
+    hard, _ = compare(base, new, tolerance=0.5, hard_tolerance=0.02)
+    assert any("padding waste" in m for m in hard)
+
+
+def test_missing_row_and_missing_metrics_hard_fail():
+    base = make_record()
+    new = copy.deepcopy(base)
+    new["rows"] = new["rows"][:1]                 # serve row vanished
+    del new["obs"]["counters"]["cache.hits"]
+    del new["obs"]["gauges"]["engine.padding_waste"]
+    hard, _ = compare(base, new, tolerance=0.5, hard_tolerance=0.02)
+    assert any("row missing" in m for m in hard)
+    assert any("counters missing" in m for m in hard)
+    assert any("gauge missing" in m for m in hard)
+
+
+def test_compare_cli_exit_codes(tmp_path, capsys):
+    base_p = tmp_path / "base.json"
+    obs.write_bench_json(str(base_p), make_record())
+
+    assert compare_main([str(base_p), "--against", str(base_p)]) == 0
+    assert "OK" in capsys.readouterr().out
+
+    bad = make_record()
+    bad["obs"]["counters"]["cache.hits"] = 0
+    bad_p = tmp_path / "bad.json"
+    obs.write_bench_json(str(bad_p), bad)
+    assert compare_main([str(bad_p), "--against", str(base_p)]) == 1
+    assert "FAIL" in capsys.readouterr().out
+
+    (tmp_path / "broken.json").write_text("{not json")
+    assert compare_main([str(tmp_path / "broken.json"),
+                         "--against", str(base_p)]) == 2

@@ -16,7 +16,7 @@ import pytest
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
-from benchmarks.flops import step_cost
+from benchmarks.flops import step_cost, xla_cost_analysis
 from repro.config import ModelConfig, ShapeConfig, TrainConfig
 from repro.models import transformer
 from repro.train.optimizer import adamw_init
@@ -60,7 +60,7 @@ def test_analytic_flops_match_xla(case):
     opt = jax.eval_shape(lambda: adamw_init(
         transformer.init(cfg, jax.random.PRNGKey(0))))
     compiled = jax.jit(step).lower(params, opt, batch).compile()
-    xla_flops = compiled.cost_analysis()["flops"]
+    xla_flops = xla_cost_analysis(compiled)["flops"]
     analytic = step_cost(cfg, shape, chips=1).flops
     ratio = analytic / xla_flops
     assert 0.8 < ratio < 1.25, (case, analytic, xla_flops, ratio)

@@ -14,6 +14,8 @@ committed ``benchmarks/baselines/BENCH_seed.json`` with
   kern/*    kernel micro-benchmarks
   batch/*   request-axis throughput (problems/sec vs batch size)
   serve/*   TrajectoryEngine tracks/sec + latency percentiles
+  dist/*    method="distributed" weak/strong scaling (subprocess with
+            forced host devices -- this process's device count is locked)
 
 ``--fast`` shrinks the sweeps (CI-sized); ``--smoke`` shrinks further to
 bit-rot-check sizes (every section runs in seconds); default runs the full
@@ -29,7 +31,30 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 # fixed RNG seeds per section -- recorded into the JSON artifact so every
 # number is reproducible from the file alone
-SEEDS = {"fig1": 0, "fig2": 1, "kern": 0, "batch": 0, "serve": 0}
+SEEDS = {"fig1": 0, "fig2": 1, "kern": 0, "batch": 0, "serve": 0, "dist": 0}
+
+
+def _dist_rows(smoke: bool) -> list:
+    """Run benchmarks/distributed_scaling.py in a subprocess (XLA's forced
+    host-device count locks at first jax init, so the 8-device sweep
+    cannot run in this process) and parse its --emit-rows output."""
+    import json
+    import os
+    import subprocess
+
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env.setdefault("REPRO_BENCH_DEVICES", "8")
+    cmd = [sys.executable,
+           str(Path(__file__).resolve().parent / "distributed_scaling.py"),
+           "--emit-rows"] + (["--smoke"] if smoke else [])
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         timeout=3600)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"distributed_scaling subprocess failed:\n{out.stderr[-4000:]}")
+    return [json.loads(line) for line in out.stdout.splitlines()
+            if line.strip().startswith("{")]
 
 
 def main() -> None:
@@ -38,7 +63,7 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes: CI bit-rot check for every section")
     ap.add_argument("--only", default="",
-                    help="comma list: fig1,fig2,kern,batch,serve")
+                    help="comma list: fig1,fig2,kern,batch,serve,dist")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="write the BENCH_<name>.json artifact here "
                          "(CI: BENCH_smoke.json)")
@@ -75,6 +100,8 @@ def main() -> None:
         rows += batch_throughput.run(smoke=args.smoke or args.fast)
     if only is None or "serve" in only:
         rows += engine_latency.run(smoke=args.smoke or args.fast)
+    if only is None or "dist" in only:
+        rows += _dist_rows(smoke=args.smoke or args.fast)
 
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

@@ -1,9 +1,11 @@
 """Temporal parallelism across devices: the paper's scan, sharded in time.
 
-Forces 8 host devices, shards a T=512-block Kalman-Bucy element sequence
-over them, and runs the distributed suffix scan (local Blelloch scan +
-one all-gather of carries + local fix-up) -- the multi-pod decomposition
-of DESIGN.md S3.  Verifies exact agreement with the single-device scan.
+Forces 8 host devices and solves one T=512-block MAP problem through the
+PUBLIC estimation surface with ``method="distributed"`` -- the solver
+shards both global associative scans over the mesh's time axis (local
+Blelloch scan + one all-gather of carries + redundant carry scan + local
+fix-up; the multi-pod decomposition of DESIGN.md S3).  Verifies exact
+agreement with the single-device ``parallel_rts`` method.
 
     PYTHONPATH=src python examples/distributed_scan_demo.py
 """
@@ -16,46 +18,40 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-from functools import partial
-
 import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.wiener_velocity import WienerVelocityConfig
 from repro.core import (
-    distributed_scan, grid_lqt_from_linear, lqt_combine, simulate_linear,
-    suffix_scan, time_grid,
+    DistributedOptions, Estimator, ParallelOptions, Problem,
+    simulate_linear, time_grid,
 )
-from repro.core.elements import discrete_block_elements, terminal_element
-from repro.core.types import LQTElement
+from repro.distributed import MeshSpec
 
 cfg = WienerVelocityConfig(p0=1.0)
 model = cfg.model()
 T, n = 512, 10
 ts = time_grid(cfg.t0, cfg.tf, T * n)
 _, y = simulate_linear(model, ts, jax.random.PRNGKey(0))
-grid = grid_lqt_from_linear(model, ts, y)
+problem = Problem.single(model, ts, y)
 
-blocks, _ = discrete_block_elements(grid, n)
-# fold the prior element into the last block so T stays device-divisible
-last = jax.tree_util.tree_map(lambda a: a[-1], blocks)
-folded = lqt_combine(last, terminal_element(grid))
-elems = jax.tree_util.tree_map(
-    lambda a, f: jnp.concatenate([a[:-1], f[None]], axis=0), blocks, folded)
+# One mesh entry point: MeshSpec describes the (time x batch) layout and
+# is passed wherever a mesh= is accepted (or entered via .activate()).
+mesh = MeshSpec(time=8)
 
-mesh = jax.make_mesh((8,), ("time",))
-spec = LQTElement(*(P("time"),) * 5)
-dist = jax.jit(shard_map(
-    partial(distributed_scan, lqt_combine, axis_name="time", reverse=True),
-    mesh=mesh, in_specs=(spec,), out_specs=spec))
+dist = Estimator(model, method="distributed", mesh=mesh,
+                 options=DistributedOptions(nsub=n, mode="discrete"))
+single = Estimator(model, method="parallel_rts",
+                   options=ParallelOptions(nsub=n, mode="discrete"))
 
-got = dist(elems)
-want = suffix_scan(lqt_combine, elems)
-gap = max(float(jnp.abs(a - b).max()) for a, b in zip(got, want))
+sol_dist = dist.solve(problem)
+sol_single = single.solve(problem)
+gap = max(float(jnp.abs(sol_dist.x - sol_single.x).max()),
+          float(jnp.abs(sol_dist.S - sol_single.S).max()))
+
 print(f"devices           : {jax.device_count()}")
 print(f"time blocks       : {T} ({T // 8} per device)")
-print(f"distributed vs single-device scan max gap: {gap:.2e}")
-print("filter info at t_f (diag):", jnp.diagonal(got.J[0]).round(3))
+print(f"distributed vs single-device parallel max gap: {gap:.2e}")
+print("filter info at t_f (diag):",
+      jnp.diagonal(sol_dist.S[-1]).round(3))
 assert gap < 1e-8
 print("OK")

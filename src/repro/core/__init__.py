@@ -36,6 +36,7 @@ from .estimator import (
 )
 from .nonlinear import iterated_map, iterated_solve
 from .options import (
+    DistributedOptions,
     IteratedOptions,
     KernelOptions,
     ParallelOptions,
@@ -53,7 +54,7 @@ from .registry import (
     register_method,
 )
 from .parallel import parallel_backward, parallel_rts, parallel_two_filter
-from .pscan import distributed_scan, prefix_scan, suffix_scan
+from .pscan import distributed_scan, prefix_scan, sharded_scan, suffix_scan
 from .sde import (
     LinearSDE,
     NonlinearSDE,
@@ -87,7 +88,8 @@ __all__ = [
     # unified surface
     "Estimator", "Problem", "Solution",
     "SolverOptions", "SequentialOptions", "ParallelOptions",
-    "TwoFilterOptions", "KernelOptions", "IteratedOptions",
+    "TwoFilterOptions", "KernelOptions", "DistributedOptions",
+    "IteratedOptions",
     "PaddingReport", "BucketInfo", "ExecutableCache",
     "cache_stats", "clear_cache",
     # registry
@@ -99,7 +101,7 @@ __all__ = [
     # solver building blocks
     "parallel_backward", "parallel_rts", "parallel_two_filter",
     "sequential_backward", "sequential_rts", "sequential_two_filter",
-    "prefix_scan", "suffix_scan", "distributed_scan",
+    "prefix_scan", "suffix_scan", "distributed_scan", "sharded_scan",
     "lqt_combine", "affine_combine", "apply_element_to_value",
     "value_as_element", "elem_min_initial",
     "build_grid_lqt", "grid_lqt_from_linear", "grid_lqt_from_nonlinear",

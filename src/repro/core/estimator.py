@@ -31,6 +31,7 @@ outer loop.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import threading
 import time
@@ -43,7 +44,7 @@ import numpy as np
 from repro import obs
 
 from .nonlinear import iterated_solve
-from .options import IteratedOptions, SolverOptions
+from .options import DistributedOptions, IteratedOptions, SolverOptions
 from .padding import bucket_length, next_pow2, pad_record, slice_solution
 from .registry import MethodSpec, get_method
 from .sde import (
@@ -387,8 +388,16 @@ class Estimator:
         nonlinear models either that (outer loop defaults) or an
         :class:`~repro.core.options.IteratedOptions` wrapping it.  ``None``
         means all defaults.
-      mesh: optional ``jax.sharding.Mesh``; stacked batches are sharded
-        over ``mesh.shape[batch_axis]`` devices with ``shard_map``.
+      mesh: optional ``jax.sharding.Mesh`` OR
+        :class:`repro.distributed.MeshSpec` (the one mesh entry point --
+        normalised via :func:`repro.distributed.as_mesh`).  Stacked
+        batches are sharded over ``mesh.shape[batch_axis]`` devices;
+        ``method="distributed"`` additionally shards the time axis over
+        the mesh axis named by its options (an ambient
+        :meth:`MeshSpec.activate` / ``mesh_context`` mesh is picked up
+        when this argument is ``None``).  A mesh/device fingerprint is
+        part of the executable-cache key, so an executable compiled under
+        one mesh is never replayed under another.
       diagnostics: compute ``Solution.cost`` / ``cost_trace`` (default).
         ``False`` skips the Onsager-Machlup evaluations -- use for hot
         serving paths that never read them.
@@ -400,14 +409,18 @@ class Estimator:
                  options=None, mesh=None, batch_axis: str = "data",
                  diagnostics: bool = True,
                  cache: Optional[ExecutableCache] = None):
+        from repro.distributed.sharding import as_mesh
+
         self._spec = get_method(method)
         self.model = model
         self.method = method
         self.options = self._resolve_options(options)
-        self.mesh = mesh
+        self.mesh = as_mesh(mesh)
         self.batch_axis = batch_axis
         self.diagnostics = diagnostics
         self._cache = _CACHE if cache is None else cache
+        self._distributed = issubclass(self._spec.options_cls,
+                                       DistributedOptions)
 
     def _resolve_options(self, options):
         cls = self._spec.options_cls
@@ -448,6 +461,64 @@ class Estimator:
             o = o.inner
         return getattr(o, "nsub", 1)
 
+    # -- mesh plumbing ------------------------------------------------------
+
+    def _method_options(self):
+        """The method-level options (unwrapping ``IteratedOptions``)."""
+        o = self.options
+        return o.inner if isinstance(o, IteratedOptions) else o
+
+    def _resolved_mesh(self):
+        """The mesh THIS solve will actually run under.
+
+        Non-distributed methods use ``self.mesh`` as-is.  The distributed
+        method resolves exactly like its solver will at trace time
+        (explicit mesh, else ambient context, else default time-only
+        mesh; ``None`` = single-device fallback), so the executable-cache
+        fingerprint and the traced collectives always agree.
+        """
+        if not self._distributed:
+            return self.mesh
+        from repro.distributed.sharding import resolve_time_mesh
+
+        o = self._method_options()
+        return resolve_time_mesh(o.time_axis,
+                                 devices_per_time=o.devices_per_time,
+                                 mesh=self.mesh)
+
+    def _batch_spmd_axis(self, mesh) -> Optional[str]:
+        """The mesh axis a distributed stacked batch shards over: the
+        first of ``options.batch_axes`` present on the mesh (so the same
+        options work on time-only and 2-D meshes)."""
+        if mesh is None:
+            return None
+        o = self._method_options()
+        for a in o.batch_axes:
+            if a in mesh.axis_names and a != o.time_axis:
+                return a
+        return None
+
+    def _batch_shard_size(self, mesh) -> int:
+        """Devices the stacked batch axis spreads over (1 = unsharded)."""
+        if mesh is None:
+            return 1
+        if self._distributed:
+            ax = self._batch_spmd_axis(mesh)
+            return mesh.shape[ax] if ax is not None else 1
+        if self.batch_axis in mesh.axis_names:
+            return mesh.shape[self.batch_axis]
+        return 1
+
+    def _mesh_scope(self):
+        """Context activating ``self.mesh`` around traced calls, so the
+        distributed solver resolves the SAME mesh the cache key was
+        fingerprinted with (jit traces lazily, inside the first call)."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.distributed.sharding import mesh_context
+
+        return mesh_context(self.mesh, batch_axes=(self.batch_axis,))
+
     # -- executable construction -------------------------------------------
 
     def _check_model(self, problem: Problem) -> None:
@@ -462,15 +533,18 @@ class Estimator:
         ``(jitted_fn, args, fresh)`` -- ``fresh`` marks a cache miss (the
         executable compiles on its first run)."""
         self._check_model(problem)
+        from repro.distributed.sharding import mesh_fingerprint
+
         ts, y = problem.ts, problem.y
         mask, x_init = problem.measurement_mask, problem.x_init
         stacked = problem.kind == "stacked"
-        if stacked and self.mesh is not None:
-            axis = self.mesh.shape[self.batch_axis]
-            if y.shape[0] % axis:
+        resolved = self._resolved_mesh()
+        if stacked:
+            axis = self._batch_shard_size(resolved)
+            if axis > 1 and y.shape[0] % axis:
                 raise ValueError(
-                    f"batch {y.shape[0]} not divisible by mesh axis "
-                    f"{self.batch_axis!r} size {axis}")
+                    f"batch {y.shape[0]} not divisible by mesh batch axis "
+                    f"size {axis}")
 
         args: List[Any] = [ts, y]
         axes: List[Optional[int]] = [0 if (stacked and ts.ndim == 2) else None,
@@ -493,12 +567,20 @@ class Estimator:
                 axes.append(None if shared else 0)
 
         has_mask, has_xinit = mask is not None, x_init is not None
+        # mesh_fingerprint of the RESOLVED mesh: an executable traced
+        # under one mesh (its collectives bake in axis names, shard
+        # counts and device ids) is never replayed under another, even
+        # when the Estimator itself holds mesh=None and the mesh arrives
+        # ambiently.
         key_tail = (
             self.method, self.options, problem.kind, self.batch_axis,
+            mesh_fingerprint(resolved),
             has_mask, has_xinit, self.diagnostics,
             tuple((a.shape, str(a.dtype)) for a in args),
             tuple(axes))
         model, spec, options = self.model, self._spec, self.options
+        spmd_axis = self._batch_spmd_axis(resolved) if (
+            stacked and self._distributed) else None
 
         def build():
             def solve_one(*call_args):
@@ -511,12 +593,27 @@ class Estimator:
 
             fn = solve_one
             if stacked:
-                fn = jax.vmap(fn, in_axes=tuple(axes))
-                if self.mesh is not None:
-                    from repro.distributed.sharding import shard_over_batch
-                    fn = shard_over_batch(
-                        fn, self.mesh, self.batch_axis,
-                        tuple(ax == 0 for ax in axes))
+                if self._distributed:
+                    # vmap composes with the solver's inner shard_map;
+                    # spmd_axis_name lands the batch dim on the mesh's
+                    # batch axis for 2-D (time x batch) layouts.  (A
+                    # shard_map wrapper would nest shard_maps, which jax
+                    # does not support.)
+                    if spmd_axis is not None and resolved.shape[
+                            spmd_axis] > 1:
+                        fn = jax.vmap(fn, in_axes=tuple(axes),
+                                      spmd_axis_name=spmd_axis)
+                    else:
+                        fn = jax.vmap(fn, in_axes=tuple(axes))
+                else:
+                    fn = jax.vmap(fn, in_axes=tuple(axes))
+                    if (self.mesh is not None
+                            and self.batch_axis in self.mesh.axis_names):
+                        from repro.distributed.sharding import (
+                            shard_over_batch)
+                        fn = shard_over_batch(
+                            fn, self.mesh, self.batch_axis,
+                            tuple(ax == 0 for ax in axes))
             return jax.jit(fn)
 
         fn, fresh = self._cache.get_entry(model, self.mesh, key_tail, build)
@@ -545,15 +642,16 @@ class Estimator:
             return self._solve_ragged(problem)
         if not (self.diagnostics and obs.enabled()):
             # hot path: no obs objects touched, fully async dispatch
-            fn, args, _ = self._prepare(problem)
-            return fn(*args)
+            with self._mesh_scope():
+                fn, args, _ = self._prepare(problem)
+                return fn(*args)
         with obs.trace_span("estimator.solve"):
             with obs.trace_span("estimator.solve.prepare"):
                 fn, args, fresh = self._prepare(problem)
             phase = ("estimator.solve.compile" if fresh
                      else "estimator.solve.execute")
             t0 = time.perf_counter()
-            with obs.trace_span(phase, xla=True):
+            with obs.trace_span(phase, xla=True), self._mesh_scope():
                 out = fn(*args)
                 jax.block_until_ready(out)
             if fresh:
@@ -589,7 +687,7 @@ class Estimator:
             raise ValueError(
                 "lower() supports single/stacked problems; a ragged solve "
                 "composes one executable per bucket")
-        with obs.trace_span("estimator.lower"):
+        with obs.trace_span("estimator.lower"), self._mesh_scope():
             fn, args, _ = self._prepare(problem)
             return fn.lower(*args)
 
@@ -614,8 +712,8 @@ class Estimator:
                       for i in idxs]
             B = len(padded)
             B_pad = next_pow2(B) if problem.pad_batch else B
-            if self.mesh is not None:
-                axis = self.mesh.shape[self.batch_axis]
+            axis = self._batch_shard_size(self._resolved_mesh())
+            if axis > 1:
                 B_pad = -(-B_pad // axis) * axis
             rows = padded + [padded[0]] * (B_pad - B)   # recycle row 0
             ts_b = jnp.asarray(np.stack([r[0] for r in rows]))

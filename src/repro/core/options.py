@@ -16,6 +16,10 @@ universal keyword soup on every entry point:
   the ``parallel_kernel`` method (``block_size`` lanes per kernel grid
   step, ``interpret`` tri-state with automatic non-TPU fallback,
   ``precision`` compute dtype of the kernel scan);
+* :class:`DistributedOptions` -- parallel options + the time-axis-sharding
+  knobs of the ``distributed`` method (``time_axis`` / ``batch_axes`` mesh
+  axis names, ``devices_per_time``, ``carry_dtype`` of the redundant carry
+  scan, ``fallback`` behaviour below 2 shards);
 * :class:`IteratedOptions` -- the iterated-linearisation (nonlinear) layer:
   ``iterations`` / ``divergence_correction`` plus the ``inner`` linear
   options forwarded to the method that solves each linearised subproblem.
@@ -129,6 +133,73 @@ class KernelOptions(ParallelOptions):
         import jax
 
         return jax.default_backend() != "tpu"
+
+
+CARRY_DTYPES = ("default", "float32", "float64")
+FALLBACKS = ("auto", "error")
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributedOptions(ParallelOptions):
+    """Options of the time-axis-sharded parallel smoother (``distributed``).
+
+    ``time_axis`` names the mesh axis the block scan is sharded over;
+    ``batch_axes`` names the mesh axes the stacked/ragged batch dimension
+    may be sharded over (intersected with the actual mesh axes at solve
+    time, so the same options work on a time-only and a 2-D mesh).
+    ``devices_per_time`` pins the time-shard count when building a default
+    mesh (``None`` = all visible devices); an explicit/ambient mesh with a
+    different ``time_axis`` extent is an error, not a silent reshard.
+    ``carry_dtype`` is the dtype of the O(P)-sequential redundant scan over
+    the all-gathered per-shard carries (``"default"`` keeps the element
+    dtype).  ``fallback="auto"`` degrades to the single-device parallel
+    scan when fewer than 2 time shards are available; ``"error"`` raises
+    instead.
+    """
+
+    time_axis: str = "time"
+    batch_axes: tuple = ("data",)
+    devices_per_time: Optional[int] = None
+    carry_dtype: str = "default"
+    fallback: str = "auto"
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        if not isinstance(self.time_axis, str) or not self.time_axis:
+            raise ValueError(
+                f"time_axis must be a non-empty str, got {self.time_axis!r}")
+        if isinstance(self.batch_axes, list):
+            object.__setattr__(self, "batch_axes", tuple(self.batch_axes))
+        if not isinstance(self.batch_axes, tuple) or not all(
+                isinstance(a, str) and a for a in self.batch_axes):
+            raise ValueError(
+                f"batch_axes must be a tuple of non-empty axis names, "
+                f"got {self.batch_axes!r}")
+        if self.time_axis in self.batch_axes:
+            raise ValueError(
+                f"time_axis {self.time_axis!r} cannot also be a batch axis")
+        if self.devices_per_time is not None and (
+                not isinstance(self.devices_per_time, int)
+                or self.devices_per_time < 1):
+            raise ValueError(
+                f"devices_per_time must be None or a positive int, "
+                f"got {self.devices_per_time!r}")
+        if self.carry_dtype not in CARRY_DTYPES:
+            raise ValueError(
+                f"carry_dtype must be one of {CARRY_DTYPES}, "
+                f"got {self.carry_dtype!r}")
+        if self.fallback not in FALLBACKS:
+            raise ValueError(
+                f"fallback must be one of {FALLBACKS}, got {self.fallback!r}")
+
+    def resolve_carry_dtype(self):
+        """The jnp dtype of the redundant carry scan, or ``None`` to keep
+        the element dtype."""
+        if self.carry_dtype == "default":
+            return None
+        import jax.numpy as jnp
+
+        return jnp.dtype(self.carry_dtype)
 
 
 @dataclasses.dataclass(frozen=True)

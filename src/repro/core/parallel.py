@@ -108,7 +108,8 @@ def parallel_backward(
 
 
 def _recover_affine(grid: GridLQT, values_full: ValueFn, nsub: int,
-                    mode: str) -> jnp.ndarray:
+                    mode: str,
+                    prefix_scan_fn: Optional[Callable] = None) -> jnp.ndarray:
     """Method 1 (eq. 47): parallel RTS trajectory recovery."""
     Phi, beta = affine_recovery_maps(grid, values_full, mode)
     T = grid.N // nsub
@@ -133,7 +134,10 @@ def _recover_affine(grid: GridLQT, values_full: ValueFn, nsub: int,
     cum, totals = jax.vmap(block)(maps)           # (T, n, ...), (T, ...)
 
     # Global prefix scan over block totals (eqs. 45-46).
-    prefix = pscan.prefix_scan(affine_combine, totals)        # (T, ...)
+    if prefix_scan_fn is not None:
+        prefix = prefix_scan_fn(totals)                       # (T, ...)
+    else:
+        prefix = pscan.prefix_scan(affine_combine, totals)    # (T, ...)
 
     phi0 = jnp.linalg.solve(values_full.S[0], values_full.v[0])
     bound = (jnp.einsum("tij,j->ti", prefix.Phi, phi0) + prefix.beta)
@@ -150,18 +154,23 @@ def parallel_rts(
     grid: GridLQT, nsub: int, mode: str = "euler",
     combine_fn: Callable = lqt_combine,
     suffix_scan_fn: Optional[Callable] = None,
+    prefix_scan_fn: Optional[Callable] = None,
 ) -> MAPSolution:
     """Parallel continuous-time RTS smoother (sections 4.1-4.3, method 1).
 
     ``suffix_scan_fn`` (elems -> inclusive suffix combine) replaces the
     default on-chip associative scan of the backward pass; the
     ``parallel_kernel`` method passes the lane-major Pallas scan
-    (:func:`repro.kernels.lqt_combine.ops.kernel_suffix_scan`) here.
+    (:func:`repro.kernels.lqt_combine.ops.kernel_suffix_scan`) here, the
+    ``distributed`` method passes the time-axis-sharded scan
+    (:func:`repro.core.pscan.sharded_scan`).  ``prefix_scan_fn`` does the
+    same for the affine recovery scan of the forward pass (eqs. 45-46).
     """
     values_full, _, _, _ = parallel_backward(
         grid, nsub, mode, combine_fn=combine_fn,
         suffix_scan_fn=suffix_scan_fn)
-    phi = _recover_affine(grid, values_full, nsub, mode)
+    phi = _recover_affine(grid, values_full, nsub, mode,
+                          prefix_scan_fn=prefix_scan_fn)
     return MAPSolution(
         x=jnp.flip(phi, axis=0),
         S=jnp.flip(values_full.S, axis=0),

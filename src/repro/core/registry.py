@@ -19,6 +19,7 @@ from __future__ import annotations
 from typing import Callable, Dict, NamedTuple, Optional, Tuple, Type
 
 from .options import (
+    DistributedOptions,
     KernelOptions,
     ParallelOptions,
     SequentialOptions,
@@ -121,11 +122,56 @@ def _parallel_kernel_solver(grid: GridLQT, o: KernelOptions) -> MAPSolution:
     return parallel_rts(grid, o.nsub, o.mode, suffix_scan_fn=suffix)
 
 
+def _distributed_solver(grid: GridLQT, o: DistributedOptions) -> MAPSolution:
+    """RTS smoother with both global scans sharded over a named time axis
+    (:func:`repro.core.pscan.sharded_scan`): local Blelloch scan per shard,
+    one all-gather of the P per-shard carries, redundant carry scan, local
+    fix-up -- span O(log(T/P) + P).
+
+    The mesh is resolved at TRACE time: an explicit/ambient mesh carrying
+    ``options.time_axis`` (see :func:`repro.distributed.resolve_time_mesh`)
+    wins, else a default time-only mesh over ``devices_per_time`` (or all
+    visible) devices is built.  With fewer than 2 time shards the solver
+    degrades to the single-device parallel scan (``fallback="auto"``) or
+    raises (``fallback="error"``).
+    """
+    from repro.distributed.sharding import resolve_time_mesh
+
+    from . import pscan
+    from .combine import affine_combine, lqt_combine
+
+    mesh = resolve_time_mesh(
+        o.time_axis, devices_per_time=o.devices_per_time)
+    if mesh is None:
+        if o.fallback == "error":
+            raise RuntimeError(
+                f"method='distributed' needs >= 2 devices on mesh axis "
+                f"{o.time_axis!r} (fallback='error'); pass "
+                f"fallback='auto' to degrade to the single-device scan")
+        return parallel_rts(grid, o.nsub, o.mode)
+
+    carry_dtype = o.resolve_carry_dtype()
+
+    def suffix(elems):
+        return pscan.sharded_scan(
+            lqt_combine, elems, mesh=mesh, axis_name=o.time_axis,
+            reverse=True, carry_dtype=carry_dtype)
+
+    def prefix(elems):
+        return pscan.sharded_scan(
+            affine_combine, elems, mesh=mesh, axis_name=o.time_axis,
+            carry_dtype=carry_dtype)
+
+    return parallel_rts(grid, o.nsub, o.mode,
+                        suffix_scan_fn=suffix, prefix_scan_fn=prefix)
+
+
 register_method(
     "parallel_rts",
     lambda grid, o: parallel_rts(grid, o.nsub, o.mode),
     ParallelOptions)
 register_method("parallel_kernel", _parallel_kernel_solver, KernelOptions)
+register_method("distributed", _distributed_solver, DistributedOptions)
 register_method(
     "parallel_two_filter",
     lambda grid, o: parallel_two_filter(

@@ -1,5 +1,6 @@
 from . import sharding
 from .sharding import (
-    choose_pspec, logical_constraint, mesh_context, named_sharding,
-    tree_pspecs, tree_shardings,
+    MeshSpec, as_mesh, choose_pspec, logical_constraint, mesh_context,
+    mesh_fingerprint, named_sharding, resolve_time_mesh, tree_pspecs,
+    tree_shardings,
 )

@@ -1,8 +1,20 @@
-"""Logical-axis sharding rules (DP/TP/EP/SP) with divisibility fallback.
+"""Mesh surface (``MeshSpec``) + logical-axis sharding rules.
 
-Parameters and activations are annotated with LOGICAL axis names
-("embed", "heads", "ff", "vocab", "experts", ...).  ``choose_pspec`` maps a
-logical shape to a concrete ``PartitionSpec`` for the active mesh:
+``MeshSpec`` is THE way to hand the estimation system a device mesh: one
+frozen description of the 2-D (time x batch) device layout consumed by
+:class:`repro.core.estimator.Estimator`, ``serving.TrajectoryEngine`` and
+the ``method="distributed"`` solver alike.  ``.build()`` materialises the
+``jax.sharding.Mesh``; ``.activate()`` enters :func:`mesh_context` so
+ambient consumers (the distributed solver resolving its time axis via
+:func:`resolve_time_mesh`, model code using :func:`logical_constraint`)
+see the same mesh.  Everywhere a ``mesh=`` argument is accepted, a raw
+``Mesh`` keeps working -- :func:`as_mesh` normalises either form.
+
+The rest of this module is the LOGICAL axis-name rules (DP/TP/EP/SP)
+with divisibility fallback.  Parameters and activations are annotated
+with LOGICAL axis names ("embed", "heads", "ff", "vocab", "experts",
+...).  ``choose_pspec`` maps a logical shape to a concrete
+``PartitionSpec`` for the active mesh:
 
 * exactly one tensor dimension is model-sharded, picked by walking
   ``MODEL_PRIORITY`` and taking the first logical axis that is present AND
@@ -21,10 +33,13 @@ mesh-agnostic and single-device tests run unchanged.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
+import functools
 import threading
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # priority of logical axes for the single model-sharded dimension
@@ -90,6 +105,136 @@ def data_parallel_size(mesh: Optional[Mesh] = None) -> int:
 
 def active_mesh() -> Optional[Mesh]:
     return _CTX.mesh
+
+
+# ---------------------------------------------------------------------------
+# MeshSpec: the one mesh entry point
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """One declarative description of the 2-D (time x batch) device mesh.
+
+    ``time`` devices shard the TIME axis (the ``method="distributed"``
+    associative scan, :func:`repro.core.pscan.sharded_scan`); ``batch``
+    devices shard the REQUEST axis (stacked-problem batches,
+    ``TrajectoryEngine`` waves).  Either may be 1 -- the axis is still
+    named in the mesh, so the same spec works for time-only, batch-only
+    and fully 2-D layouts.  Total devices used: ``time * batch`` (the
+    first that many of ``jax.devices()`` unless ``.build(devices=...)``
+    is given an explicit sequence).
+
+    Pass a ``MeshSpec`` anywhere a ``mesh=`` argument is accepted
+    (``Estimator``, ``TrajectoryEngine``) or enter ``.activate()`` to
+    make it ambient for mesh-aware code (the distributed solver picks it
+    up via :func:`resolve_time_mesh`).
+    """
+
+    time: int = 1
+    batch: int = 1
+    time_axis: str = "time"
+    batch_axis: str = "data"
+
+    def __post_init__(self) -> None:
+        for field, v in (("time", self.time), ("batch", self.batch)):
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(
+                    f"MeshSpec.{field} must be a positive int, got {v!r}")
+        for field, v in (("time_axis", self.time_axis),
+                         ("batch_axis", self.batch_axis)):
+            if not isinstance(v, str) or not v:
+                raise ValueError(
+                    f"MeshSpec.{field} must be a non-empty str, got {v!r}")
+        if self.time_axis == self.batch_axis:
+            raise ValueError(
+                f"time_axis and batch_axis must differ, both "
+                f"{self.time_axis!r}")
+
+    @property
+    def num_devices(self) -> int:
+        return self.time * self.batch
+
+    def build(self, devices: Optional[Sequence] = None) -> Mesh:
+        """Materialise the ``jax.sharding.Mesh``: ``(time, batch)`` over
+        ``(time_axis, batch_axis)`` on the first ``time * batch`` devices."""
+        devices = list(jax.devices()) if devices is None else list(devices)
+        need = self.num_devices
+        if need > len(devices):
+            raise ValueError(
+                f"MeshSpec needs {need} devices "
+                f"({self.time} x {self.batch}), only {len(devices)} "
+                f"available")
+        arr = np.asarray(devices[:need]).reshape(self.time, self.batch)
+        return Mesh(arr, (self.time_axis, self.batch_axis))
+
+    def activate(self):
+        """Context manager: build the mesh and enter :func:`mesh_context`
+        so ambient consumers (``resolve_time_mesh``,
+        ``logical_constraint``) see it."""
+        return mesh_context(self.build(), batch_axes=(self.batch_axis,))
+
+
+def as_mesh(mesh) -> Optional[Mesh]:
+    """Normalise the public ``mesh=`` argument: ``None`` | ``Mesh`` |
+    ``MeshSpec`` -> ``Optional[Mesh]``."""
+    if mesh is None or isinstance(mesh, Mesh):
+        return mesh
+    if isinstance(mesh, MeshSpec):
+        return mesh.build()
+    raise TypeError(
+        f"mesh must be None, a jax.sharding.Mesh or a MeshSpec, got "
+        f"{type(mesh).__name__}")
+
+
+def mesh_fingerprint(mesh: Optional[Mesh]) -> Optional[Tuple]:
+    """A hashable identity for WHICH mesh an executable was compiled
+    under: axis names + mesh shape + backend + exact device ids.  Part of
+    the executable-cache key so an executable compiled under one mesh is
+    never replayed under another (the meshes' collectives differ even
+    when argument shapes agree)."""
+    if mesh is None:
+        return None
+    devs = tuple(d.id for d in mesh.devices.flat)
+    platform = mesh.devices.flat[0].platform
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape), platform,
+            devs)
+
+
+@functools.lru_cache(maxsize=32)
+def _default_time_mesh(time_axis: str, n: int) -> Mesh:
+    return Mesh(np.asarray(jax.devices()[:n]), (time_axis,))
+
+
+def resolve_time_mesh(time_axis: str, *, devices_per_time: Optional[int]
+                      = None, mesh: Optional[Mesh] = None) -> Optional[Mesh]:
+    """The mesh a time-axis-sharded solve should run under.
+
+    Resolution order: an explicit ``mesh`` carrying ``time_axis``, else
+    the ambient :func:`mesh_context` / :meth:`MeshSpec.activate` mesh
+    carrying it, else a default 1-D mesh over ``devices_per_time``
+    devices (all local devices when ``None``).  Returns ``None`` when
+    fewer than 2 time-shards are available -- the caller decides whether
+    that falls back to the single-device scan or errors
+    (``DistributedOptions.fallback``).
+    """
+    for candidate in (mesh, _CTX.mesh):
+        if candidate is not None and time_axis in candidate.axis_names:
+            if (devices_per_time is not None
+                    and candidate.shape[time_axis] != devices_per_time):
+                raise ValueError(
+                    f"devices_per_time={devices_per_time} but the mesh's "
+                    f"{time_axis!r} axis has size "
+                    f"{candidate.shape[time_axis]}")
+            return candidate
+    avail = len(jax.devices())
+    n = avail if devices_per_time is None else devices_per_time
+    if n > avail:
+        raise ValueError(
+            f"devices_per_time={n} exceeds the {avail} available devices")
+    if n < 2:
+        return None
+    return _default_time_mesh(time_axis, n)
 
 
 def _axis_size(mesh: Mesh, names) -> int:

@@ -14,9 +14,11 @@
 * **row recycling / continuous batching** -- short waves are topped up by
   recycling a live row, and the queue is drained in FIFO waves grouped by
   bucket so one submit/collect cycle serves any mix of lengths;
-* **optional batch-axis sharding** -- pass a mesh (e.g. from
-  :func:`repro.launch.mesh.make_host_mesh`) and each wave is ``shard_map``-
-  sharded over the mesh's data axis, spreading requests across devices.
+* **optional mesh sharding** -- pass a mesh (a ``jax.sharding.Mesh`` or
+  a :class:`repro.distributed.MeshSpec`) and each wave is sharded over
+  the mesh's batch axis, spreading requests across devices; with
+  ``method="distributed"`` the mesh's time axis additionally shards the
+  associative scan of every solve (2-D time x batch layout).
 
 API: ``submit(ts, y) -> ticket``; ``step()`` solves one wave; ``collect()``
 pops finished ``(ticket, Solution)`` pairs; ``estimate(records)`` is the
@@ -68,7 +70,10 @@ class TrajectoryEngine:
         :class:`~repro.core.Estimator`.
       bucket_sizes: optional explicit padded-length buckets (multiples of
         the method's block size); default is power-of-two block counts.
-      mesh: optional ``jax.sharding.Mesh`` for batch-axis sharding.
+      mesh: optional ``jax.sharding.Mesh`` or
+        :class:`repro.distributed.MeshSpec` (the unified mesh entry
+        point) for batch-axis sharding; with ``method="distributed"``
+        the mesh's time axis additionally shards the scan itself.
     """
 
     def __init__(
@@ -100,12 +105,14 @@ class TrajectoryEngine:
             options = legacy_options(model, method, **legacy)
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
-        if mesh is not None and batch % mesh.shape[batch_axis]:
-            raise ValueError(
-                f"batch {batch} not divisible by mesh axis "
-                f"{batch_axis!r} size {mesh.shape[batch_axis]}")
         self.estimator = Estimator(model, method=method, options=options,
                                    mesh=mesh, batch_axis=batch_axis)
+        shard = self.estimator._batch_shard_size(
+            self.estimator._resolved_mesh())
+        if batch % shard:
+            raise ValueError(
+                f"batch {batch} not divisible by mesh batch axis size "
+                f"{shard}")
         self.model = model
         self.batch = batch
         self.bucket_sizes = bucket_sizes

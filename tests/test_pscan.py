@@ -50,12 +50,9 @@ def test_scan_under_jit_and_grad():
 _DISTRIBUTED_SNIPPET = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"
     import jax
-    if len(jax.devices()) < 8:
-        # host-platform forcing did not take (e.g. a non-CPU default
-        # backend): report and bail so the test can skip, not fail.
-        print(f"SKIP-DEVICES={len(jax.devices())}")
-        raise SystemExit(0)
+    assert len(jax.devices()) == 8, jax.devices()
     jax.config.update("jax_enable_x64", True)
     import jax.numpy as jnp
     import numpy as np
@@ -105,12 +102,44 @@ _DISTRIBUTED_SNIPPET = textwrap.dedent("""
     want = suffix_scan(lqt_combine, le)
     for a, b in zip(got, want):
         np.testing.assert_allclose(a, b, rtol=1e-7, atol=1e-8)
+
+    # --- sharded_scan: top-level entry, incl. non-divisible lengths ---
+    from repro.core import sharded_scan
+    for T2 in (64, 65, 67, 17, 8, 5):   # 5 < 2P: single-device degrade
+        e2 = AffineElement(
+            jnp.asarray(rng.standard_normal((T2, n, n)) * 0.5),
+            jnp.asarray(rng.standard_normal((T2, n))))
+        for reverse in (False, True):
+            got = jax.jit(lambda e, r=reverse: sharded_scan(
+                affine_combine, e, mesh=mesh, axis_name="t",
+                reverse=r))(e2)
+            want = (suffix_scan if reverse else prefix_scan)(
+                affine_combine, e2)
+            np.testing.assert_allclose(got.Phi, want.Phi,
+                                       rtol=1e-9, atol=1e-9)
+            np.testing.assert_allclose(got.beta, want.beta,
+                                       rtol=1e-9, atol=1e-9)
+
+    # carry_dtype: f32 elements with an f64 redundant carry scan stays
+    # close to the full-f64 reference (and keeps the element dtype).
+    e32 = AffineElement(
+        jnp.asarray(rng.standard_normal((64, n, n)) * 0.5, jnp.float32),
+        jnp.asarray(rng.standard_normal((64, n)), jnp.float32))
+    got = jax.jit(lambda e: sharded_scan(
+        affine_combine, e, mesh=mesh, axis_name="t",
+        carry_dtype=jnp.float64))(e32)
+    assert got.Phi.dtype == jnp.float32
+    want = prefix_scan(affine_combine, e32)
+    np.testing.assert_allclose(got.Phi, want.Phi, rtol=1e-4, atol=1e-4)
     print("DISTRIBUTED-SCAN-OK")
 """)
 
 
 @pytest.mark.slow
+@pytest.mark.distributed
 def test_distributed_scan_8_devices():
+    """Real 8-device run: the subprocess pins the CPU platform, so the
+    forced host-device count always materialises (no skip path)."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(os.path.dirname(__file__), "..", "src"),
@@ -119,9 +148,5 @@ def test_distributed_scan_8_devices():
     out = subprocess.run(
         [sys.executable, "-c", _DISTRIBUTED_SNIPPET],
         capture_output=True, text=True, env=env, timeout=600)
-    assert out.returncode == 0, out.stderr[-4000:]
-    if "SKIP-DEVICES=" in out.stdout:
-        n = out.stdout.split("SKIP-DEVICES=")[1].split()[0]
-        pytest.skip(f"needs 8 local devices, subprocess saw {n} "
-                    f"(host-platform forcing unavailable on this backend)")
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-4000:])
     assert "DISTRIBUTED-SCAN-OK" in out.stdout

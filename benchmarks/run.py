@@ -14,6 +14,7 @@ committed ``benchmarks/baselines/BENCH_seed.json`` with
   kern/*    kernel micro-benchmarks
   batch/*   request-axis throughput (problems/sec vs batch size)
   serve/*   TrajectoryEngine tracks/sec + latency percentiles
+  stream/*  StreamingEngine fixed-lag window latency + tracks/sec
   dist/*    method="distributed" weak/strong scaling (subprocess with
             forced host devices -- this process's device count is locked)
 
@@ -31,7 +32,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 # fixed RNG seeds per section -- recorded into the JSON artifact so every
 # number is reproducible from the file alone
-SEEDS = {"fig1": 0, "fig2": 1, "kern": 0, "batch": 0, "serve": 0, "dist": 0}
+SEEDS = {"fig1": 0, "fig2": 1, "kern": 0, "batch": 0, "serve": 0,
+         "stream": 0, "dist": 0}
 
 
 def _dist_rows(smoke: bool) -> list:
@@ -63,7 +65,7 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes: CI bit-rot check for every section")
     ap.add_argument("--only", default="",
-                    help="comma list: fig1,fig2,kern,batch,serve,dist")
+                    help="comma list: fig1,fig2,kern,batch,serve,stream,dist")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="write the BENCH_<name>.json artifact here "
                          "(CI: BENCH_smoke.json)")
@@ -77,7 +79,7 @@ def main() -> None:
     rows = []
     from benchmarks import (
         batch_throughput, engine_latency, fig1_linear, fig2_nonlinear,
-        kernels_bench,
+        kernels_bench, streaming_latency,
     )
     if only is None or "fig1" in only:
         if args.smoke:
@@ -100,6 +102,8 @@ def main() -> None:
         rows += batch_throughput.run(smoke=args.smoke or args.fast)
     if only is None or "serve" in only:
         rows += engine_latency.run(smoke=args.smoke or args.fast)
+    if only is None or "stream" in only:
+        rows += streaming_latency.run(smoke=args.smoke or args.fast)
     if only is None or "dist" in only:
         rows += _dist_rows(smoke=args.smoke or args.fast)
 

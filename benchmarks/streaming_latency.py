@@ -1,0 +1,98 @@
+"""Streaming-latency benchmark: ``StreamingEngine`` window latency
+percentiles and track throughput.
+
+The serving question for the STREAMING engine is not drain throughput of
+whole records but the freshness of a fixed-lag estimate: when a client
+pushes measurements, how long until the window containing them is
+re-solved?  This drives a deterministic multi-track workload (fixed seed;
+every track pushes ``chunk``-interval pieces round-robin, the engine
+drains between rounds so windows from different tracks batch into shared
+waves) twice -- a warmup pass that compiles the per-bucket executables,
+then a measured pass on fresh tracks running entirely on cache hits --
+and reports tracks/sec and windows/sec (measured pass) plus the p50/p99
+of the ``stream.window_latency_seconds`` obs histogram (push-to-solved
+wall time per window; the histogram covers both passes, so p99 exposes
+compile-inflated first-wave latency while p50 reflects steady state).
+
+    PYTHONPATH=src python benchmarks/streaming_latency.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import numpy as np
+
+
+def _stream_pass(engine, ts, tracks_y, chunk):
+    """Round-robin the tracks' chunks through the engine; returns
+    (tracks, windows_solved)."""
+    tids = [engine.open_track(ts[0]) for _ in tracks_y]
+    N = tracks_y[0].shape[0]
+    windows = 0
+    for i in range(0, N, chunk):
+        for tid, y in zip(tids, tracks_y):
+            k = min(chunk, N - i)
+            engine.push(tid, ts[i + 1:i + 1 + k], y[i:i + k])
+        windows += engine.run()
+    for tid in tids:
+        engine.close(tid)
+    return len(tids), windows
+
+
+def run(smoke=False, seed=0):
+    import repro.obs as obs
+    from repro.configs.wiener_velocity import WienerVelocityConfig
+    from repro.serving import StreamingEngine
+
+    model = WienerVelocityConfig(p0=1.0).model()
+    if smoke:
+        batch, n_tracks, N, chunk, lag = 4, 4, 40, 10, 16
+    else:
+        batch, n_tracks, N, chunk, lag = 8, 16, 200, 20, 64
+    rng = np.random.default_rng(seed)
+    ny = np.asarray(model.H).shape[0]
+    ts = np.linspace(0.0, N / 32.0, N + 1, dtype=np.float32)
+    tracks_y = [rng.standard_normal((N, ny)).astype(np.float32)
+                for _ in range(n_tracks)]
+
+    engine = StreamingEngine(model, lag=lag, batch=batch)
+    _stream_pass(engine, ts, tracks_y, chunk)   # warmup: compiles buckets
+
+    t0 = time.perf_counter()
+    tracks, windows = _stream_pass(engine, ts, tracks_y, chunk)
+    dt = time.perf_counter() - t0
+
+    derived = (f"tracks_per_sec={tracks / dt:.1f}"
+               f",windows_per_sec={windows / dt:.1f}")
+    if obs.enabled():
+        lat = obs.histogram("stream.window_latency_seconds").summary()
+        if lat.get("count"):
+            derived += (f",p50_ms={lat['p50'] * 1e3:.2f}"
+                        f",p99_ms={lat['p99'] * 1e3:.2f}")
+        waste = obs.gauge("stream.padding_waste").value
+        derived += f",waste={waste:.3f}"
+    return [{
+        "name": f"stream/fixedlag/B{batch}_T{n_tracks}_L{lag}",
+        "us_per_call": dt / windows * 1e6,
+        "derived": derived,
+    }]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload (CI bit-rot check)")
+    args = ap.parse_args()
+    import repro.obs as obs
+    obs.enable()
+    for r in run(smoke=args.smoke):
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

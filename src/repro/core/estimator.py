@@ -152,6 +152,19 @@ def clear_cache() -> None:
 # ---------------------------------------------------------------------------
 
 
+def _check_ny(model: Model, y, where: str = "") -> None:
+    """Reject measurements whose trailing dimension does not match the
+    model's ``ny`` -- a mismatched ``y`` would otherwise BROADCAST
+    silently against ``H x`` in the measurement cost and produce garbage
+    estimates instead of an error (skipped when ``R`` is time-varying
+    and ``ny`` is not statically known)."""
+    ny = model.ny
+    if ny is not None and y.shape[-1] != ny:
+        raise ValueError(
+            f"{where}y has measurement dimension {y.shape[-1]} but the "
+            f"model's R is {ny}x{ny} (ny={ny})")
+
+
 def _check_mask(mask, shape) -> jnp.ndarray:
     mask = jnp.asarray(mask)
     if mask.shape != shape:
@@ -165,6 +178,39 @@ def _check_mask(mask, shape) -> jnp.ndarray:
             f"measurement_mask must be a real 0/1 array (it scales R^-1), "
             f"got dtype {mask.dtype}")
     return mask
+
+
+def _check_prior(model, prior, batch: Optional[int]):
+    """Validate an information-form prior override ``(S0, v0)``.
+
+    ``S0`` is the information matrix (``P0^{-1}``) and ``v0`` the
+    information vector (``P0^{-1} m0``) at the first grid point --
+    replacing the model's ``(m0, P0)`` boundary without any inversion.
+    Shapes: shared ``(nx, nx)``/``(nx,)`` or, for stacked/ragged layouts,
+    per-record ``(B, nx, nx)``/``(B, nx)`` (both components must agree).
+    """
+    if prior is None:
+        return None
+    try:
+        S0, v0 = prior
+    except (TypeError, ValueError):
+        raise ValueError(
+            "prior must be an information-form pair (S0, v0)") from None
+    S0, v0 = jnp.asarray(S0), jnp.asarray(v0)
+    nx = model.nx
+    s_ok, v_ok = {(nx, nx)}, {(nx,)}
+    if batch is not None:
+        s_ok.add((batch, nx, nx))
+        v_ok.add((batch, nx))
+    if S0.shape not in s_ok or v0.shape not in v_ok:
+        raise ValueError(
+            f"prior (S0, v0) must have shapes {sorted(s_ok)} / "
+            f"{sorted(v_ok)}, got {S0.shape} / {v0.shape}")
+    if (S0.ndim == 3) != (v0.ndim == 2):
+        raise ValueError(
+            f"prior S0 and v0 must be both shared or both per-record, "
+            f"got shapes {S0.shape} / {v0.shape}")
+    return (S0, v0)
 
 
 def _check_x_init(model, x_init, N: int, batch: Optional[int]):
@@ -208,6 +254,7 @@ class Problem:
     y: Any
     measurement_mask: Optional[jnp.ndarray] = None
     x_init: Any = None
+    prior: Any = None
     kind: str = "single"
     bucket_sizes: Optional[Tuple[int, ...]] = None
     pad_batch: bool = True
@@ -216,8 +263,13 @@ class Problem:
 
     @classmethod
     def single(cls, model: Model, ts, y, *, measurement_mask=None,
-               x_init=None) -> "Problem":
-        """One record: ``ts`` ``(N+1,)``, ``y`` ``(N, ny)``."""
+               x_init=None, prior=None) -> "Problem":
+        """One record: ``ts`` ``(N+1,)``, ``y`` ``(N, ny)``.
+
+        ``prior`` ``(S0, v0)``: information-form initial boundary
+        (``P0^{-1}``, ``P0^{-1} m0``) replacing the model's ``(m0, P0)``
+        -- fixed-lag window solves pass the forward-filter information at
+        the window's left edge here (see docs/STREAMING.md)."""
         ts = jnp.asarray(ts)
         y = jnp.asarray(y)
         if y.ndim != 2 or y.shape[0] < 1:
@@ -225,21 +277,28 @@ class Problem:
         N = y.shape[0]
         if ts.shape != (N + 1,):
             raise ValueError(f"ts must be (N+1,) = {(N + 1,)}, got {ts.shape}")
+        _check_ny(model, y)
         if measurement_mask is not None:
             measurement_mask = _check_mask(measurement_mask, (N,))
         x_init = _check_x_init(model, x_init, N, None)
-        return cls(model, ts, y, measurement_mask, x_init, kind="single")
+        prior = _check_prior(model, prior, None)
+        return cls(model, ts, y, measurement_mask, x_init, prior,
+                   kind="single")
 
     @classmethod
     def stacked(cls, model: Model, ts, ys, *, measurement_mask=None,
-                x_init=None) -> "Problem":
+                x_init=None, prior=None) -> "Problem":
         """Stacked records ``ys`` ``(B, N, ny)`` sharing the interval
         count; ``ts`` shared ``(N+1,)`` or per-record ``(B, N+1)``.
 
         ``x_init`` (nonlinear models): shared ``(nx,)`` / ``(N+1, nx)``
         or per-record ``(B, nx)`` / ``(B, N+1, nx)``.  If ``B == N+1``
         makes a rank-2 shape ambiguous, the per-record reading wins --
-        tile to ``(B, N+1, nx)`` to force a shared trajectory."""
+        tile to ``(B, N+1, nx)`` to force a shared trajectory.
+
+        ``prior`` ``(S0, v0)``: shared ``(nx, nx)``/``(nx,)`` or
+        per-record ``(B, nx, nx)``/``(B, nx)`` information-form initial
+        boundaries (see :meth:`single`)."""
         ys = jnp.asarray(ys)
         if ys.ndim != 3:
             raise ValueError(f"ys must be (B, N, ny), got shape {ys.shape}")
@@ -253,14 +312,17 @@ class Problem:
             raise ValueError(f"ts batch {ts.shape[0]} != ys batch {B}")
         if ts.ndim not in (1, 2):
             raise ValueError(f"ts must be (N+1,) or (B, N+1), got {ts.shape}")
+        _check_ny(model, ys)
         if measurement_mask is not None:
             measurement_mask = _check_mask(measurement_mask, (B, N))
         x_init = _check_x_init(model, x_init, N, B)
-        return cls(model, ts, ys, measurement_mask, x_init, kind="stacked")
+        prior = _check_prior(model, prior, B)
+        return cls(model, ts, ys, measurement_mask, x_init, prior,
+                   kind="stacked")
 
     @classmethod
     def ragged(cls, model: Model, records: Records, *, x_init=None,
-               bucket_sizes: Optional[Sequence[int]] = None,
+               prior=None, bucket_sizes: Optional[Sequence[int]] = None,
                pad_batch: bool = True) -> "Problem":
         """Records of unequal length: ``records`` is a sequence of
         ``(ts_i, y_i)`` pairs with ``ts_i`` ``(N_i+1,)``, ``y_i``
@@ -284,6 +346,7 @@ class Problem:
                 raise ValueError(
                     f"record {i}: ts must be (N+1,) = "
                     f"{(y_i.shape[0] + 1,)}, got {ts_i.shape}")
+            _check_ny(model, y_i, where=f"record {i}: ")
             ts_all.append(ts_i)
             y_all.append(y_i)
         if x_init is not None:
@@ -297,7 +360,8 @@ class Problem:
                     f"ragged x_init must be ({nx},) shared or "
                     f"({len(records)}, {nx}) per-record points, "
                     f"got {x_init.shape}")
-        return cls(model, tuple(ts_all), tuple(y_all), None, x_init,
+        prior = _check_prior(model, prior, len(records))
+        return cls(model, tuple(ts_all), tuple(y_all), None, x_init, prior,
                    kind="ragged",
                    bucket_sizes=None if bucket_sizes is None
                    else tuple(bucket_sizes),
@@ -329,7 +393,7 @@ class Problem:
 
 
 def _solve_arrays(model: Model, spec: MethodSpec, options, ts, y, mask,
-                  x_init, diagnostics: bool = True) -> Solution:
+                  x_init, prior=None, diagnostics: bool = True) -> Solution:
     """Solve ONE record; the traced core every executable is built from.
 
     ``diagnostics=False`` skips the Onsager-Machlup cost evaluation (a
@@ -342,13 +406,14 @@ def _solve_arrays(model: Model, spec: MethodSpec, options, ts, y, mask,
             model, ts, y, lambda grid: spec.solver(grid, inner),
             iterations=options.iterations,
             divergence_correction=options.divergence_correction,
-            x_init=x_init, measurement_mask=mask,
+            x_init=x_init, measurement_mask=mask, prior=prior,
             track_costs=diagnostics)
         if not diagnostics:
             return Solution(x=sol.x, S=sol.S, v=sol.v, cov=sol.cov)
         return Solution(x=sol.x, S=sol.S, v=sol.v, cov=sol.cov,
                         cost=trace[-1], cost_trace=trace, step_norms=steps)
-    grid = grid_lqt_from_linear(model, ts, y, measurement_mask=mask)
+    grid = grid_lqt_from_linear(model, ts, y, measurement_mask=mask,
+                                prior=prior)
     sol = spec.solver(grid, options)
     return Solution(x=sol.x, S=sol.S, v=sol.v, cov=sol.cov,
                     cost=om_cost_grid(grid, sol.x) if diagnostics else None)
@@ -565,8 +630,14 @@ class Estimator:
                 shared = x_init.ndim == 1 or (
                     x_init.ndim == 2 and x_init.shape[0] != B)
                 axes.append(None if shared else 0)
+        prior = problem.prior
+        if prior is not None:
+            per_rec = stacked and prior[0].ndim == 3
+            args.extend(prior)
+            axes.extend([0 if per_rec else None] * 2)
 
         has_mask, has_xinit = mask is not None, x_init is not None
+        has_prior = prior is not None
         # mesh_fingerprint of the RESOLVED mesh: an executable traced
         # under one mesh (its collectives bake in axis names, shard
         # counts and device ids) is never replayed under another, even
@@ -575,7 +646,7 @@ class Estimator:
         key_tail = (
             self.method, self.options, problem.kind, self.batch_axis,
             mesh_fingerprint(resolved),
-            has_mask, has_xinit, self.diagnostics,
+            has_mask, has_xinit, has_prior, self.diagnostics,
             tuple((a.shape, str(a.dtype)) for a in args),
             tuple(axes))
         model, spec, options = self.model, self._spec, self.options
@@ -588,7 +659,9 @@ class Estimator:
                 t, yy = next(it), next(it)
                 m = next(it) if has_mask else None
                 xi = next(it) if has_xinit else None
+                pr = (next(it), next(it)) if has_prior else None
                 return _solve_arrays(model, spec, options, t, yy, m, xi,
+                                     prior=pr,
                                      diagnostics=self.diagnostics)
 
             fn = solve_one
@@ -704,6 +777,8 @@ class Estimator:
 
         x_init = problem.x_init
         per_record_xi = x_init is not None and x_init.ndim == 2
+        prior = problem.prior
+        per_record_prior = prior is not None and prior[0].ndim == 3
 
         out: List[Optional[Solution]] = [None] * len(lengths)
         infos: List[BucketInfo] = []
@@ -726,8 +801,14 @@ class Estimator:
                     xi_rows + [xi_rows[0]] * (B_pad - B)))
             elif x_init is not None:
                 xi_b = jnp.asarray(x_init)
+            pr_b = prior
+            if per_record_prior:
+                recycle = [idxs[0]] * (B_pad - B)
+                pr_b = (jnp.stack([prior[0][i] for i in idxs + recycle]),
+                        jnp.stack([prior[1][i] for i in idxs + recycle]))
             sub = Problem.stacked(self.model, ts_b, ys_b,
-                                  measurement_mask=mask_b, x_init=xi_b)
+                                  measurement_mask=mask_b, x_init=xi_b,
+                                  prior=pr_b)
             sol = self.solve(sub)
             infos.append(BucketInfo(n_pad=n_pad, records=B, batch=B_pad))
             for row, i in enumerate(idxs):

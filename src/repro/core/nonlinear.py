@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from .sde import (
     NonlinearSDE,
+    Prior,
     grid_lqt_from_nonlinear,
     om_cost_nonlinear,
 )
@@ -42,8 +43,9 @@ def iterated_solve(
     divergence_correction: bool = False,
     x_init: jnp.ndarray | None = None,
     measurement_mask: Optional[jnp.ndarray] = None,
+    prior: Optional[Prior] = None,
     track_costs: bool = True,
-) -> Tuple[MAPSolution, Optional[jnp.ndarray]]:
+) -> Tuple[MAPSolution, Optional[jnp.ndarray], Optional[jnp.ndarray]]:
     """Continuous-time iterated MAP estimation (paper section 5.2).
 
     ``solver`` maps a linearised :class:`~repro.core.types.GridLQT` to a
@@ -55,8 +57,13 @@ def iterated_solve(
     per-record warm-start point vmaps over records of any padded length).
     ``measurement_mask`` (``(N,)`` of 0/1) zeroes masked measurement
     intervals in every linearisation pass (padding / missing data).
+    ``prior`` ``(S0, v0)`` replaces the model's ``(m0, P0)`` initial
+    boundary with an information-form prior in every linearised subproblem
+    AND in the cost trace -- fixed-lag window re-solves pass the filter
+    information at the window's left edge here (docs/STREAMING.md).
 
-    Returns ``(solution, cost_trace, step_norms)`` where ``cost_trace[i]``
+    Returns the 3-tuple ``(solution, cost_trace, step_norms)``:
+    ``cost_trace[i]``
     is the true (nonlinear) Onsager-Machlup cost of the iterate produced
     by pass ``i+1`` -- the Gauss-Newton descent curve; ``cost_trace[-1]``
     is the cost of the returned solution.  ``step_norms[i]`` is the RMS
@@ -68,14 +75,16 @@ def iterated_solve(
     """
     N = y.shape[0]
     if x_init is None:
-        x_init = jnp.broadcast_to(model.m0, (N + 1,) + model.m0.shape)
+        mean = (model.m0 if prior is None
+                else jnp.linalg.solve(prior[0], prior[1]))
+        x_init = jnp.broadcast_to(mean, (N + 1,) + mean.shape)
     elif x_init.ndim == 1:
         x_init = jnp.broadcast_to(x_init, (N + 1,) + x_init.shape)
 
     def cost_of(x):
         return om_cost_nonlinear(
             model, ts, y, x, divergence_correction=divergence_correction,
-            measurement_mask=measurement_mask)
+            measurement_mask=measurement_mask, prior=prior)
 
     def step_norm(x_new, x_old):
         return jnp.sqrt(jnp.mean(jnp.square(x_new - x_old)))
@@ -83,7 +92,7 @@ def iterated_solve(
     def body(xbar, _):
         grid = grid_lqt_from_nonlinear(
             model, ts, y, xbar, divergence_correction=divergence_correction,
-            measurement_mask=measurement_mask)
+            measurement_mask=measurement_mask, prior=prior)
         sol = solver(grid)
         aux = ((cost_of(sol.x), step_norm(sol.x, xbar))
                if track_costs else None)
@@ -95,7 +104,7 @@ def iterated_solve(
     x_last, aux = jax.lax.scan(body, x_init, None, length=iterations - 1)
     grid = grid_lqt_from_nonlinear(
         model, ts, y, x_last, divergence_correction=divergence_correction,
-        measurement_mask=measurement_mask)
+        measurement_mask=measurement_mask, prior=prior)
     sol = solver(grid)
     if not track_costs:
         return sol, None, None

@@ -71,6 +71,13 @@ def pad_record(
         raise ValueError(f"ts has {ts.shape[0]} points for {N} intervals")
     if n_pad < N:
         raise ValueError(f"n_pad={n_pad} < record length {N}")
+    if not np.all(np.diff(ts) > 0):
+        # the padded grid extrapolates with dt_last = ts[-1] - ts[-2]; a
+        # non-increasing grid would silently produce a broken (reversed /
+        # zero-step) padded tail, so fail loudly here instead.
+        raise ValueError(
+            "ts must be strictly increasing to pad (the padded grid "
+            f"extends past t_f with the final step size); got ts={ts!r}")
     extra = n_pad - N
     dt_last = ts[-1] - ts[-2]
     ts_pad = np.concatenate(

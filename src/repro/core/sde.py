@@ -20,7 +20,7 @@ Grid conventions (see DESIGN.md S1 and tests/test_oracle.py):
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +29,13 @@ from .types import GridLQT
 
 
 Array = jnp.ndarray
+
+# Information-form prior override (S0, v0): the initial boundary enters the
+# reversed LQT as terminal information S_T = S0, v_T = v0 (= P0^{-1},
+# P0^{-1} m0 for a covariance-form prior).  Fixed-lag streaming hands the
+# forward-filter information at a window's left edge through this -- see
+# docs/STREAMING.md.
+Prior = Tuple[Array, Array]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +58,12 @@ class LinearSDE:
     @property
     def nx(self) -> int:
         return self.m0.shape[-1]
+
+    @property
+    def ny(self) -> Optional[int]:
+        """Measurement dimension, or ``None`` when ``R`` is time-varying
+        (a callable) and the dimension is not statically known."""
+        return None if callable(self.R) else jnp.asarray(self.R).shape[-1]
 
     def _eval(self, item, ts):
         if callable(item):
@@ -85,6 +98,12 @@ class NonlinearSDE:
     @property
     def nx(self) -> int:
         return self.m0.shape[-1]
+
+    @property
+    def ny(self) -> Optional[int]:
+        """Measurement dimension, or ``None`` when ``R`` is time-varying
+        (a callable) and the dimension is not statically known."""
+        return None if callable(self.R) else jnp.asarray(self.R).shape[-1]
 
     def _eval(self, item, ts):
         if callable(item):
@@ -136,6 +155,7 @@ def build_grid_lqt(
     y: Array, dt: Array, m0: Array, P0: Array,
     lin: Optional[Array] = None,
     measurement_mask: Optional[Array] = None,
+    prior: Optional[Prior] = None,
 ) -> GridLQT:
     """Time-reverse grid coefficients into the LQT problem of section 2.4.
 
@@ -149,6 +169,12 @@ def build_grid_lqt(
     the optimum (the extension just follows the drift), so the MAP estimate
     at real points is unchanged -- the basis of exact length-padding in
     :mod:`repro.core.batching`.
+
+    ``prior`` ``(S0, v0)`` replaces the covariance-form ``(m0, P0)``
+    boundary with information-form terminal values directly (no inversion):
+    fixed-lag window solves pass the forward-filter information at the
+    window's left edge here, which makes the window solve exactly the full
+    MAP restricted to the window (docs/STREAMING.md).
     """
     flip = lambda a: jnp.flip(a, axis=0)
     Rinv = jnp.linalg.inv(R)
@@ -156,8 +182,11 @@ def build_grid_lqt(
         Rinv = Rinv * measurement_mask[:, None, None]
         if lin is not None:
             lin = lin * measurement_mask[:, None]
-    S_T = jnp.linalg.inv(P0)
-    v_T = S_T @ m0
+    if prior is not None:
+        S_T, v_T = jnp.asarray(prior[0]), jnp.asarray(prior[1])
+    else:
+        S_T = jnp.linalg.inv(P0)
+        v_T = S_T @ m0
     return GridLQT(
         dt=flip(jnp.broadcast_to(dt, y.shape[:1])),
         F=-flip(F), c=-flip(c),
@@ -171,17 +200,19 @@ def build_grid_lqt(
 def grid_lqt_from_linear(
     model: LinearSDE, ts: Array, y: Array,
     measurement_mask: Optional[Array] = None,
+    prior: Optional[Prior] = None,
 ) -> GridLQT:
     F, c, H, r, Q, R = model.grids(ts)
     dt = jnp.diff(ts)
     return build_grid_lqt(F, c, H, r, Q, R, y, dt, model.m0, model.P0,
-                          measurement_mask=measurement_mask)
+                          measurement_mask=measurement_mask, prior=prior)
 
 
 def grid_lqt_from_nonlinear(
     model: NonlinearSDE, ts: Array, y: Array, xbar: Array,
     divergence_correction: bool = False,
     measurement_mask: Optional[Array] = None,
+    prior: Optional[Prior] = None,
 ) -> GridLQT:
     F, c, H, r = model.linearise(xbar, ts)
     tl = ts[:-1]
@@ -194,7 +225,8 @@ def grid_lqt_from_nonlinear(
         # phi-dependent part is  1/2 g(xbar)^T phi with g = grad div f.
         lin = 0.5 * model.divergence_gradient(xbar, ts)
     return build_grid_lqt(F, c, H, r, Q, R, y, dt, model.m0, model.P0,
-                          lin=lin, measurement_mask=measurement_mask)
+                          lin=lin, measurement_mask=measurement_mask,
+                          prior=prior)
 
 
 # ---------------------------------------------------------------------------
@@ -266,8 +298,20 @@ def simulate_nonlinear(model: NonlinearSDE, ts: Array, key: jax.Array):
     return xs, y
 
 
+def _prior_cost(model, x0: Array, prior: Optional[Prior]) -> Array:
+    """Initial-boundary cost 1/2 (x0 - m)^T P^{-1} (x0 - m), from the
+    model's covariance-form prior or an information-form override."""
+    if prior is not None:
+        S0, v0 = prior
+        d0 = x0 - jnp.linalg.solve(S0, v0)
+        return 0.5 * d0 @ S0 @ d0
+    d0 = x0 - model.m0
+    return 0.5 * d0 @ jnp.linalg.solve(model.P0, d0)
+
+
 def om_cost_linear(model: LinearSDE, ts: Array, y: Array, x: Array,
-                   measurement_mask: Optional[Array] = None) -> Array:
+                   measurement_mask: Optional[Array] = None,
+                   prior: Optional[Prior] = None) -> Array:
     """Discretised Onsager-Machlup / minimum-energy cost of a trajectory.
 
     Uses the backward-Euler quadrature matching the reversed-time solvers
@@ -275,11 +319,12 @@ def om_cost_linear(model: LinearSDE, ts: Array, y: Array, x: Array,
     constant for linear models and omitted (it cannot change the argmin).
     ``measurement_mask`` (``(N,)`` of 0/1) zeroes the measurement term on
     masked intervals, matching the solvers' missing-data semantics.
+    ``prior`` ``(S0, v0)`` replaces the initial-boundary term with the
+    information-form prior (fixed-lag window solves).
     """
     F, c, H, r, Q, R = model.grids(ts)
     dt = jnp.diff(ts)
-    d0 = x[0] - model.m0
-    cost = 0.5 * d0 @ jnp.linalg.solve(model.P0, d0)
+    cost = _prior_cost(model, x[0], prior)
     xr = x[1:]
     resid = (x[1:] - x[:-1]) / dt[:, None] - (
         jnp.einsum("kij,kj->ki", F, xr) + c)
@@ -297,13 +342,13 @@ def om_cost_nonlinear(
     model: NonlinearSDE, ts: Array, y: Array, x: Array,
     divergence_correction: bool = False,
     measurement_mask: Optional[Array] = None,
+    prior: Optional[Prior] = None,
 ) -> Array:
     dt = jnp.diff(ts)
     tl = ts[:-1]
     Q = model._eval(model.Q, tl)
     R = model._eval(model.R, tl)
-    d0 = x[0] - model.m0
-    cost = 0.5 * d0 @ jnp.linalg.solve(model.P0, d0)
+    cost = _prior_cost(model, x[0], prior)
     xr = x[1:]
     fx = jax.vmap(model.f)(xr, tl)
     resid = (x[1:] - x[:-1]) / dt[:, None] - fx

@@ -1,4 +1,5 @@
 from .engine import Request, ServeEngine
+from .streaming import StreamingEngine
 from .trajectory import TrajectoryEngine
 
-__all__ = ["Request", "ServeEngine", "TrajectoryEngine"]
+__all__ = ["Request", "ServeEngine", "StreamingEngine", "TrajectoryEngine"]

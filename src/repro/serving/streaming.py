@@ -1,0 +1,421 @@
+"""Streaming fixed-lag estimation service.
+
+``StreamingEngine`` turns the batch :class:`~repro.core.Estimator` into an
+online service: clients open tracks, push measurements as they arrive, and
+read back MAP estimates that are continuously refined over a sliding
+window of the most recent ``lag`` intervals.
+
+Fixed-lag smoothing, exactly
+----------------------------
+
+Every window re-solve passes the *filter information at the window's left
+edge* -- ``(Solution.S[k], Solution.v[k])`` of the previous solve -- as an
+information-form boundary prior (``Problem(..., prior=(S0, v0))``).  For
+linear models this makes the chained window solves EXACTLY equal to the
+one-shot offline MAP restricted to the window (the information recursion
+is the same sums in a different order; tests verify agreement to
+~1e-14).  States older than the lag are **evicted**: committed as final
+:class:`~repro.core.Solution` segments and never re-solved.  A committed
+state is the MAP estimate given all measurements up to ``lag`` intervals
+after it -- the classic fixed-lag approximation, exact in the window and
+within smoothing-decay of the full MAP behind it (docs/STREAMING.md).
+
+Nonlinear models additionally warm-start each re-solve from the previous
+window's trajectory (per-row ``x_init``), so the iterated smoother
+re-linearises from an already-converged nominal instead of the prior
+mean.
+
+Batching
+--------
+
+Due windows (tracks with un-solved pushes) are drained in fixed-size
+waves through the same machinery as :class:`TrajectoryEngine`
+(:mod:`repro.serving.waves`): FIFO by first-push time, grouped by padded
+bucket length, short waves recycle a live row, one compiled executable
+per (bucket, batch) reused forever.  Windows across DIFFERENT tracks
+batch together -- that is the point of a fixed window size: every track's
+window pads to the same few bucket lengths.
+
+Observability: with :mod:`repro.obs` enabled the engine reports the
+``stream.*`` taxonomy (pushes, open tracks, per-wave occupancy/padding,
+``stream.window_latency_seconds`` push-to-solve latency, eviction
+counters) -- see docs/OBSERVABILITY.md.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro import obs
+from repro.core.estimator import Estimator, Problem
+from repro.core.padding import bucket_length, slice_solution
+from repro.core.sde import LinearSDE, NonlinearSDE
+from repro.core.types import Solution
+
+from .waves import (
+    WaveItem,
+    pack_wave,
+    record_wave_metrics,
+    robust_default_options,
+    take_wave,
+)
+
+
+class _Track:
+    """Per-track streaming state (mutated only under the engine lock).
+
+    ``offset`` counts evicted intervals: the live window covers track
+    intervals ``[offset, offset + y.shape[0])``.  ``committed_*`` hold the
+    evicted history (``offset`` states); ``win_*`` the window estimate of
+    the last solve; ``prior`` the information-form boundary at the
+    window's left edge (``None`` until the first eviction -- the model
+    prior applies).
+    """
+
+    __slots__ = ("ts", "y", "offset", "prior", "x_warm", "win_x", "win_S",
+                 "win_v", "committed_x", "committed_S", "committed_v",
+                 "due_since", "solves", "last_cost")
+
+    def __init__(self, t0: float):
+        self.ts = np.asarray([t0], dtype=float)
+        self.y: Optional[np.ndarray] = None        # (N, ny) window intervals
+        self.offset = 0                            # evicted intervals
+        self.prior: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        self.x_warm: Optional[np.ndarray] = None   # (N+1, nx) last window x
+        self.win_x: Optional[np.ndarray] = None    # last SOLVED window
+        self.win_S: Optional[np.ndarray] = None
+        self.win_v: Optional[np.ndarray] = None
+        self.committed_x: List[np.ndarray] = []
+        self.committed_S: List[np.ndarray] = []
+        self.committed_v: List[np.ndarray] = []
+        self.due_since = 0.0        # perf_counter of the push that made us due
+        self.solves = 0
+        self.last_cost: Optional[float] = None
+
+    @property
+    def intervals(self) -> int:
+        """Total intervals pushed so far (committed + window)."""
+        return self.offset + (0 if self.y is None else self.y.shape[0])
+
+
+class StreamingEngine:
+    """Multi-track fixed-lag smoother service over one model.
+
+    Args:
+      model: shared :class:`LinearSDE` / :class:`NonlinearSDE`.
+      lag: window length in INTERVALS kept live behind the newest
+        measurement; anything older is evicted as committed history after
+        the next solve.  Larger lag = closer to the full MAP for the
+        committed states, more work per re-solve.
+      batch: fixed wave size -- due windows from different tracks are
+        solved ``batch`` at a time (compiled once per bucket length).
+      method / options / mesh / batch_axis: forwarded to the underlying
+        :class:`~repro.core.Estimator` (same surface as
+        :class:`TrajectoryEngine`; ``options=None`` = method defaults in
+        the robust ``discrete`` element mode, see
+        :func:`repro.serving.waves.robust_default_options`).
+      diagnostics: forwarded to the Estimator; the streaming default is
+        ``False`` (skip cost/step-norm traces -- latency path).
+
+    API: ``open_track(t0) -> id``; ``push(id, ts_new, y_new)`` appends
+    measurements (``ts_new`` strictly increasing, after the track's last
+    time point); ``step()`` solves one wave of due windows; ``run()``
+    drains; ``estimate(id)`` returns the stitched committed + window
+    :class:`Solution`; ``window(id)`` / ``committed(id)`` the parts;
+    ``close(id)`` finalises and removes the track.
+
+    ``open_track``/``push``/``estimate``/``collect``-style readers are
+    thread-safe; drive ``step``/``run`` from ONE solver thread while
+    clients push concurrently (pushes landing mid-solve simply mark the
+    track due again).
+    """
+
+    def __init__(
+        self,
+        model: Union[LinearSDE, NonlinearSDE],
+        *,
+        lag: int = 32,
+        batch: int = 8,
+        method: str = "parallel_rts",
+        options=None,
+        bucket_sizes: Optional[Sequence[int]] = None,
+        mesh=None,
+        batch_axis: str = "data",
+        diagnostics: bool = False,
+    ):
+        if lag < 1:
+            raise ValueError(f"lag must be >= 1 interval, got {lag}")
+        if options is None:
+            # serving default: the robust exact-composition mode -- a
+            # streaming window grows without bound between solves, so the
+            # length-dependent stability of the euler default is exactly
+            # the failure mode to avoid (see robust_default_options).
+            options = robust_default_options(method)
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        self.estimator = Estimator(model, method=method, options=options,
+                                   mesh=mesh, batch_axis=batch_axis,
+                                   diagnostics=diagnostics)
+        shard = self.estimator._batch_shard_size(
+            self.estimator._resolved_mesh())
+        if batch % shard:
+            raise ValueError(
+                f"batch {batch} not divisible by mesh batch axis size "
+                f"{shard}")
+        self.model = model
+        self.lag = lag
+        self.batch = batch
+        self.bucket_sizes = bucket_sizes
+        self.nonlinear = isinstance(model, NonlinearSDE)
+
+        self._lock = threading.Lock()
+        self._tracks: Dict[int, _Track] = {}
+        # track id -> insertion order IS the FIFO due order
+        self._due: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()
+        self._next_id = 0
+        self.waves = 0
+        self.evicted_intervals = 0
+
+    # -- client surface -----------------------------------------------------
+
+    def open_track(self, t0: float = 0.0) -> int:
+        """Open a streaming track whose time grid starts at ``t0``;
+        returns the track id used by every other call."""
+        with self._lock:
+            tid = self._next_id
+            self._next_id += 1
+            self._tracks[tid] = _Track(float(t0))
+            n = len(self._tracks)
+        if obs.enabled():
+            obs.inc("stream.tracks_opened")
+            obs.set_gauge("stream.tracks", n)
+        return tid
+
+    def push(self, track_id: int, ts_new, y_new) -> None:
+        """Append measurements to a track and mark its window due.
+
+        ``ts_new`` (``(K,)``) are the new grid points -- strictly
+        increasing and strictly after the track's current last time --
+        and ``y_new`` (``(K, ny)``) the measurement at each.
+        """
+        ts_new = np.asarray(ts_new, dtype=float)
+        y_new = np.asarray(y_new)
+        if ts_new.ndim != 1 or ts_new.shape[0] < 1:
+            raise ValueError(
+                f"ts_new must be (K,) with K >= 1, got shape {ts_new.shape}")
+        if y_new.ndim != 2 or y_new.shape[0] != ts_new.shape[0]:
+            raise ValueError(
+                f"y_new must be (K, ny) = ({ts_new.shape[0]}, ny), got "
+                f"shape {y_new.shape}")
+        if not np.all(np.diff(ts_new) > 0):
+            raise ValueError(
+                f"ts_new must be strictly increasing; got {ts_new!r}")
+        ny = self.model.ny
+        if ny is not None and y_new.shape[1] != ny:
+            raise ValueError(
+                f"y_new has measurement dimension {y_new.shape[1]} but "
+                f"the model's R is {ny}x{ny} (ny={ny})")
+        with self._lock:
+            track = self._get(track_id)
+            if ts_new[0] <= track.ts[-1]:
+                raise ValueError(
+                    f"ts_new must start strictly after the track's last "
+                    f"time {track.ts[-1]}; got ts_new[0]={ts_new[0]}")
+            if track.y is not None and y_new.shape[1] != track.y.shape[1]:
+                raise ValueError(
+                    f"y_new has ny={y_new.shape[1]}, track has "
+                    f"ny={track.y.shape[1]}")
+            track.ts = np.concatenate([track.ts, ts_new])
+            track.y = (y_new.copy() if track.y is None
+                       else np.concatenate([track.y, y_new]))
+            if track_id not in self._due:
+                track.due_since = time.perf_counter()
+                self._due[track_id] = None
+            depth = len(self._due)
+        if obs.enabled():
+            obs.inc("stream.pushes")
+            obs.inc("stream.pushed_intervals", ts_new.shape[0])
+            obs.set_gauge("stream.queue_depth", depth)
+
+    def due(self) -> int:
+        """Number of tracks with un-solved pushes."""
+        return len(self._due)
+
+    def tracks(self) -> List[int]:
+        with self._lock:
+            return sorted(self._tracks)
+
+    # -- wave processing ----------------------------------------------------
+
+    def step(self) -> int:
+        """Solve one wave of due windows; returns windows solved (0 if
+        nothing is due).  Snapshots each due track's CURRENT window, so a
+        push landing mid-solve marks the track due again for the next
+        wave rather than being lost."""
+        with self._lock:
+            if not self._due:
+                return 0
+            queue = collections.deque(
+                self._snapshot(tid) for tid in self._due)
+            wave = take_wave(queue, self.batch)
+            for item in wave:
+                del self._due[item.key]
+            depth = len(self._due)
+        with obs.trace_span("stream.step"):
+            n_pad = wave[0].n_pad
+            ts_b, ys_b, mask_b, xi_b, pr_b = pack_wave(wave, self.batch)
+            sol = self.estimator.solve(
+                Problem.stacked(self.model, ts_b, ys_b,
+                                measurement_mask=mask_b,
+                                x_init=xi_b, prior=pr_b))
+            with self._lock:
+                for row, item in enumerate(wave):
+                    self._apply(item, slice_solution(
+                        sol, row, item.y.shape[0]))
+                self.waves += 1
+            if obs.enabled():
+                record_wave_metrics("stream", wave, n_pad, self.batch, depth)
+        return len(wave)
+
+    def run(self) -> int:
+        """Drain every due window; returns total windows solved.  With
+        :mod:`repro.obs` enabled sets ``stream.windows_per_sec``."""
+        total = 0
+        t0 = time.perf_counter()
+        with obs.trace_span("stream.run"):
+            while self._due:
+                total += self.step()
+        dt = time.perf_counter() - t0
+        if total and dt > 0:
+            obs.set_gauge("stream.windows_per_sec", total / dt)
+        return total
+
+    # -- estimates ----------------------------------------------------------
+
+    def estimate(self, track_id: int) -> Solution:
+        """Stitched committed + window estimate: ``x``/``S``/``v`` over
+        every SOLVED time point of the track (``n_solved + 1`` states).
+
+        ``S``/``v`` are the forward-filter information at each point (the
+        quantity the window handoff chains on); pushes newer than the
+        last solve are not included -- call :meth:`run` first for a
+        fully-refreshed estimate.
+        """
+        with self._lock:
+            track = self._get(track_id)
+            if track.win_x is None:
+                raise ValueError(
+                    f"track {track_id} has no estimate yet -- push "
+                    "measurements and call step()/run() first")
+            return Solution(
+                x=np.concatenate(track.committed_x + [track.win_x]),
+                S=np.concatenate(track.committed_S + [track.win_S]),
+                v=np.concatenate(track.committed_v + [track.win_v]),
+                cost=track.last_cost)
+
+    def window(self, track_id: int) -> Solution:
+        """The live window's estimate alone (last solve; ``lag + 1`` states
+        once the track is past its lag)."""
+        with self._lock:
+            track = self._get(track_id)
+            if track.win_x is None:
+                raise ValueError(
+                    f"track {track_id} has no estimate yet -- push "
+                    "measurements and call step()/run() first")
+            return Solution(x=track.win_x, S=track.win_S, v=track.win_v)
+
+    def committed(self, track_id: int) -> Optional[Solution]:
+        """The evicted (finalised) history as a Solution segment of
+        ``offset`` states, or ``None`` if nothing has been evicted yet.
+        Committed states are never re-solved."""
+        with self._lock:
+            track = self._get(track_id)
+            if not track.committed_x:
+                return None
+            return Solution(x=np.concatenate(track.committed_x),
+                            S=np.concatenate(track.committed_S),
+                            v=np.concatenate(track.committed_v))
+
+    def close(self, track_id: int) -> Solution:
+        """Finalise a track: solve any outstanding pushes, return the full
+        stitched estimate, and drop the track's state."""
+        self.run()
+        final = self.estimate(track_id)
+        with self._lock:
+            del self._tracks[track_id]
+            self._due.pop(track_id, None)
+            n = len(self._tracks)
+        if obs.enabled():
+            obs.inc("stream.tracks_closed")
+            obs.set_gauge("stream.tracks", n)
+        return final
+
+    # -- internals ----------------------------------------------------------
+
+    def _get(self, track_id: int) -> _Track:
+        try:
+            return self._tracks[track_id]
+        except KeyError:
+            raise KeyError(
+                f"unknown track id {track_id} (open tracks: "
+                f"{sorted(self._tracks)})") from None
+
+    def _snapshot(self, tid: int) -> WaveItem:
+        """WaveItem for a due track's current window (caller holds lock).
+        Arrays are never mutated in place (pushes re-concatenate), so the
+        references stay valid while the solve runs outside the lock."""
+        track = self._tracks[tid]
+        n_pad = bucket_length(track.y.shape[0], self.estimator.block_size,
+                              self.bucket_sizes)
+        x_init = None
+        if self.nonlinear:
+            # uniform warm start across the wave: re-solves continue from
+            # the previous window trajectory, fresh windows from the prior
+            # mean (= iterated_solve's own default)
+            if track.x_warm is not None:
+                x_init = track.x_warm
+            elif track.prior is None:
+                x_init = np.broadcast_to(
+                    np.asarray(self.model.m0),
+                    (track.y.shape[0] + 1,) + np.shape(self.model.m0))
+            else:
+                mean = np.linalg.solve(track.prior[0], track.prior[1])
+                x_init = np.broadcast_to(
+                    mean, (track.y.shape[0] + 1,) + mean.shape)
+        return WaveItem(tid, track.ts, track.y, n_pad, track.due_since,
+                        x_init=x_init, prior=track.prior)
+
+    def _apply(self, item: WaveItem, sol: Solution) -> None:
+        """Fold one window solution back into its track (caller holds
+        lock): store the window estimate, evict past the lag, advance the
+        boundary prior and warm start."""
+        track = self._tracks.get(item.key)
+        if track is None:                      # closed mid-solve
+            return
+        n = item.y.shape[0]                    # window intervals at snapshot
+        x = np.asarray(sol.x)
+        S = np.asarray(sol.S)
+        v = np.asarray(sol.v)
+        evict = max(0, n - self.lag)
+        if evict:
+            track.committed_x.append(x[:evict])
+            track.committed_S.append(S[:evict])
+            track.committed_v.append(v[:evict])
+            track.prior = (S[evict].copy(), v[evict].copy())
+            track.ts = track.ts[evict:]
+            track.y = track.y[evict:]
+            track.offset += evict
+            self.evicted_intervals += evict
+            if obs.enabled():
+                obs.inc("stream.evicted_intervals", evict)
+        track.win_x, track.win_S, track.win_v = \
+            x[evict:], S[evict:], v[evict:]
+        track.x_warm = x[evict:] if self.nonlinear else None
+        track.solves += 1
+        if sol.cost is not None:
+            track.last_cost = float(sol.cost)

@@ -13,7 +13,9 @@
   :mod:`repro.core.padding`);
 * **row recycling / continuous batching** -- short waves are topped up by
   recycling a live row, and the queue is drained in FIFO waves grouped by
-  bucket so one submit/collect cycle serves any mix of lengths;
+  bucket so one submit/collect cycle serves any mix of lengths (the wave
+  machinery is shared with :class:`~repro.serving.StreamingEngine`, see
+  :mod:`repro.serving.waves`);
 * **optional mesh sharding** -- pass a mesh (a ``jax.sharding.Mesh`` or
   a :class:`repro.distributed.MeshSpec`) and each wave is sharded over
   the mesh's batch axis, spreading requests across devices; with
@@ -21,8 +23,9 @@
   associative scan of every solve (2-D time x batch layout).
 
 API: ``submit(ts, y) -> ticket``; ``step()`` solves one wave; ``collect()``
-pops finished ``(ticket, Solution)`` pairs; ``estimate(records)`` is the
-synchronous convenience wrapper.
+pops finished ``(ticket, Solution)`` pairs (``collect(tickets=...)``
+pops only YOUR tickets -- concurrent collectors never steal each other's
+results); ``estimate(records)`` is the synchronous convenience wrapper.
 
 The solver configuration is the Estimator's: pass ``method=`` plus the
 method's options dataclass (e.g. ``ParallelOptions(nsub=10,
@@ -34,28 +37,27 @@ The pre-redesign kwargs (``nsub``/``mode``/``iterations``/
 from __future__ import annotations
 
 import collections
-import dataclasses
+import threading
 import time
 import warnings
 from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
 from repro.core.estimator import Estimator, Problem, legacy_options
-from repro.core.padding import bucket_length, pad_record, slice_solution
+from repro.core.padding import bucket_length, slice_solution
 from repro.core.sde import LinearSDE, NonlinearSDE
 from repro.core.types import Solution
 
-
-@dataclasses.dataclass
-class _Pending:
-    ticket: int
-    ts: np.ndarray
-    y: np.ndarray
-    n_pad: int
-    submit_t: float = 0.0   # perf_counter at submit; queue-to-collect latency
+from .waves import (
+    WaveItem,
+    pack_wave,
+    record_wave_metrics,
+    robust_default_options,
+    take_wave,
+    validate_record,
+)
 
 
 class TrajectoryEngine:
@@ -66,14 +68,21 @@ class TrajectoryEngine:
       batch: fixed wave size (compiled batch).  With a mesh it must be
         divisible by the mesh's ``batch_axis`` size.
       method: registered method name; ``options`` its options dataclass
-        (``None`` = method defaults) -- both forwarded to the underlying
-        :class:`~repro.core.Estimator`.
+        -- both forwarded to the underlying :class:`~repro.core.Estimator`.
+        ``options=None`` uses the method's defaults with the ``discrete``
+        element mode (NOT the Estimator's paper-faithful ``euler``
+        default, which can go NaN on long records -- see
+        :func:`repro.serving.waves.robust_default_options`).
       bucket_sizes: optional explicit padded-length buckets (multiples of
         the method's block size); default is power-of-two block counts.
       mesh: optional ``jax.sharding.Mesh`` or
         :class:`repro.distributed.MeshSpec` (the unified mesh entry
         point) for batch-axis sharding; with ``method="distributed"``
         the mesh's time axis additionally shards the scan itself.
+
+    ``submit``/``collect`` are thread-safe (one lock guards the queue and
+    the finished map); ``step``/``run`` may be driven from a dedicated
+    solver thread while clients submit and collect concurrently.
     """
 
     def __init__(
@@ -103,6 +112,11 @@ class TrajectoryEngine:
                 "pass the method's options dataclass via options= "
                 "(see docs/MIGRATION.md)", DeprecationWarning, stacklevel=2)
             options = legacy_options(model, method, **legacy)
+        elif options is None:
+            # serving default: the robust exact-composition mode, NOT the
+            # Estimator's paper-faithful euler default -- see
+            # robust_default_options for the stability rationale.
+            options = robust_default_options(method)
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
         self.estimator = Estimator(model, method=method, options=options,
@@ -117,7 +131,8 @@ class TrajectoryEngine:
         self.batch = batch
         self.bucket_sizes = bucket_sizes
 
-        self._queue: Deque[_Pending] = collections.deque()
+        self._lock = threading.Lock()
+        self._queue: Deque[WaveItem] = collections.deque()
         self._done: Dict[int, Solution] = {}
         self._next_ticket = 0
         self.waves = 0            # compiled-batch solves issued
@@ -126,54 +141,63 @@ class TrajectoryEngine:
     # -- submit / collect ---------------------------------------------------
 
     def submit(self, ts: np.ndarray, y: np.ndarray) -> int:
-        """Enqueue one record; returns a ticket redeemable at collect()."""
-        ts = np.asarray(ts)
-        y = np.asarray(y)
-        if y.ndim != 2 or y.shape[0] < 1:
-            raise ValueError(
-                f"y must be (N, ny) with N >= 1, got shape {y.shape}")
-        if ts.shape != (y.shape[0] + 1,):
-            raise ValueError(
-                f"ts must be (N+1,) = {(y.shape[0] + 1,)}, got {ts.shape}")
-        ticket = self._next_ticket
-        self._next_ticket += 1
+        """Enqueue one record; returns a ticket redeemable at collect().
+
+        Validates shapes AND that ``ts`` is strictly increasing -- padding
+        extrapolates the grid with the final step size, so a non-monotone
+        grid would otherwise silently produce a broken padded problem.
+        """
+        ts, y = validate_record(ts, y)
         n_pad = bucket_length(y.shape[0], self.estimator.block_size,
                               self.bucket_sizes)
-        self._queue.append(
-            _Pending(ticket, ts, y, n_pad, time.perf_counter()))
+        with self._lock:
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._queue.append(
+                WaveItem(ticket, ts, y, n_pad, time.perf_counter()))
+            depth = len(self._queue)
         if obs.enabled():
             obs.inc("engine.submitted")
-            obs.set_gauge("engine.queue_depth", len(self._queue))
+            obs.set_gauge("engine.queue_depth", depth)
         return ticket
 
     def pending(self) -> int:
         return len(self._queue)
 
-    def collect(self) -> List[Tuple[int, Solution]]:
-        """Pop all finished (ticket, solution) pairs, ticket order."""
-        out = sorted(self._done.items())
-        self._done.clear()
+    def collect(
+        self, tickets: Optional[Sequence[int]] = None,
+    ) -> List[Tuple[int, Solution]]:
+        """Pop finished ``(ticket, solution)`` pairs, ticket order.
+
+        With ``tickets=None`` pops EVERY finished pair (single-consumer
+        mode).  ``tickets=[...]`` pops only those tickets that are
+        finished, leaving everything else for other collectors -- the
+        multi-client form ``estimate()`` uses so concurrent callers never
+        steal each other's results.  Tickets that are unknown, still
+        pending, or already collected are simply not returned; use
+        :meth:`describe_ticket` / ``estimate()`` for a diagnosis.
+        """
+        with self._lock:
+            if tickets is None:
+                out = sorted(self._done.items())
+                self._done.clear()
+            else:
+                out = sorted((t, self._done.pop(t))
+                             for t in set(tickets) if t in self._done)
         return out
 
-    # -- wave processing ----------------------------------------------------
+    def describe_ticket(self, ticket: int) -> str:
+        """Human-readable state of a ticket (for error messages)."""
+        with self._lock:
+            if ticket in self._done:
+                return "finished (awaiting collect)"
+            if any(item.key == ticket for item in self._queue):
+                return "queued (not yet solved; call step()/run())"
+            if 0 <= ticket < self._next_ticket:
+                return "already collected (results are popped exactly once)"
+            return f"never issued (tickets so far: 0..{self._next_ticket - 1})"
 
-    def _take_wave(self) -> List[_Pending]:
-        """FIFO wave: the oldest request fixes the bucket; later same-bucket
-        requests top the wave up to ``batch`` (others keep their place).
-        Scanning stops as soon as the wave is full, so draining Q queued
-        requests is O(Q), not O(Q^2/batch)."""
-        n_pad = self._queue[0].n_pad
-        wave: List[_Pending] = []
-        keep: Deque[_Pending] = collections.deque()
-        while self._queue and len(wave) < self.batch:
-            req = self._queue.popleft()
-            if req.n_pad == n_pad:
-                wave.append(req)
-            else:
-                keep.append(req)
-        keep.extend(self._queue)           # untouched tail, order preserved
-        self._queue = keep
-        return wave
+    # -- wave processing ----------------------------------------------------
 
     def step(self) -> int:
         """Solve one fixed-size wave; returns the number of requests
@@ -183,51 +207,26 @@ class TrajectoryEngine:
         rows / batch), padding waste (padded vs real intervals), queue
         depth, and per-record submit-to-done latency percentiles
         (``engine.record_latency_seconds``)."""
-        if not self._queue:
-            return 0
+        with self._lock:
+            if not self._queue:
+                return 0
+            wave = take_wave(self._queue, self.batch)
+            depth = len(self._queue)
         with obs.trace_span("engine.step"):
-            wave = self._take_wave()
             n_pad = wave[0].n_pad
-            padded = [pad_record(r.ts, r.y, n_pad) for r in wave]
-            rows = padded + [padded[0]] * (self.batch - len(padded))
-            self.recycled_rows += self.batch - len(padded)
-            ts_b = jnp.asarray(np.stack([r[0] for r in rows]))
-            ys_b = jnp.asarray(np.stack([r[1] for r in rows]))
-            mask_b = jnp.asarray(np.stack([r[2] for r in rows]))
+            ts_b, ys_b, mask_b, _, _ = pack_wave(wave, self.batch)
             sol = self.estimator.solve(
                 Problem.stacked(self.model, ts_b, ys_b,
                                 measurement_mask=mask_b))
-            self.waves += 1
-            for row, req in enumerate(wave):
-                self._done[req.ticket] = slice_solution(
-                    sol, row, req.y.shape[0])
+            done = {item.key: slice_solution(sol, row, item.y.shape[0])
+                    for row, item in enumerate(wave)}
+            with self._lock:
+                self._done.update(done)
+                self.waves += 1
+                self.recycled_rows += self.batch - len(wave)
             if obs.enabled():
-                self._record_wave_metrics(wave, n_pad)
+                record_wave_metrics("engine", wave, n_pad, self.batch, depth)
         return len(wave)
-
-    def _record_wave_metrics(self, wave: List[_Pending],
-                             n_pad: int) -> None:
-        now = time.perf_counter()
-        real = sum(r.y.shape[0] for r in wave)
-        solved = n_pad * self.batch
-        obs.inc("engine.waves")
-        obs.inc("engine.completed", len(wave))
-        obs.inc("engine.recycled_rows", self.batch - len(wave))
-        obs.inc("engine.real_intervals", real)
-        obs.inc("engine.padded_intervals", solved)
-        obs.record("engine.wave_occupancy", len(wave) / self.batch,
-                   buckets=[i / 20 for i in range(21)])
-        # cumulative padding waste: fraction of solved intervals that were
-        # padding or recycled rows (0 = perfect packing)
-        c = obs.REGISTRY.counter
-        total_real = c("engine.real_intervals").value
-        total_solved = c("engine.padded_intervals").value
-        if total_solved:
-            obs.set_gauge("engine.padding_waste",
-                          1.0 - total_real / total_solved)
-        obs.set_gauge("engine.queue_depth", len(self._queue))
-        for req in wave:
-            obs.record("engine.record_latency_seconds", now - req.submit_t)
 
     def run(self) -> int:
         """Drain the queue; returns the total number of requests solved.
@@ -249,8 +248,22 @@ class TrajectoryEngine:
     def estimate(
         self, records: Sequence[Tuple[np.ndarray, np.ndarray]],
     ) -> List[Solution]:
-        """Submit ``(ts, y)`` records, drain, return solutions in order."""
+        """Submit ``(ts, y)`` records, drain, return solutions in order.
+
+        Collects ONLY its own tickets (``collect(tickets=...)``), so
+        concurrent ``collect()`` / ``estimate()`` callers cannot steal
+        these results.  If a ticket still cannot be redeemed the error
+        says why (queued / already collected / never issued) instead of a
+        bare ``KeyError``.
+        """
         tickets = [self.submit(ts, y) for ts, y in records]
         self.run()
-        got = dict(self.collect())
+        got = dict(self.collect(tickets=tickets))
+        missing = [t for t in tickets if t not in got]
+        if missing:
+            states = ", ".join(
+                f"ticket {t}: {self.describe_ticket(t)}" for t in missing)
+            raise KeyError(
+                f"estimate() could not redeem {len(missing)} ticket(s) -- "
+                f"{states}")
         return [got[t] for t in tickets]

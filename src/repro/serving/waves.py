@@ -1,0 +1,199 @@
+"""Shared wave machinery for the serving engines.
+
+Both serving engines -- :class:`~repro.serving.TrajectoryEngine` (whole
+offline records) and :class:`~repro.serving.StreamingEngine` (fixed-lag
+sliding windows) -- batch work the same way: FIFO waves of exactly
+``batch`` rows grouped by padded bucket length, short waves topped up by
+recycling a live row, padded rows masked exactly (see
+:mod:`repro.core.padding`).  This module is that machinery, factored out
+so wave selection, padding/stacking and the wave-level obs metrics have
+ONE implementation:
+
+* :class:`WaveItem` -- one queued unit of work (a record or a window
+  snapshot), optionally carrying a warm-start trajectory and an
+  information-form prior for its left boundary;
+* :func:`validate_record` -- shared submit-time shape + time-grid checks
+  (strictly-increasing ``ts`` -- a non-monotone grid would silently
+  extrapolate a broken padded grid, see :func:`repro.core.padding.pad_record`);
+* :func:`take_wave` -- FIFO wave selection: the oldest item fixes the
+  bucket, later same-bucket items top the wave up (continuous batching);
+* :func:`pack_wave` -- pad + stack a wave into the arrays of one
+  ``Problem.stacked`` solve (measurements, mask, per-row warm starts,
+  per-row priors);
+* :func:`record_wave_metrics` -- the per-wave obs readout under a metric
+  prefix (``engine.*`` / ``stream.*`` -- taxonomy in
+  docs/OBSERVABILITY.md).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.core.padding import pad_record
+from repro.core.registry import get_method
+
+
+def robust_default_options(method: str):
+    """The serving engines' default solver options: the method's defaults
+    with the ``discrete`` element mode.
+
+    The core :class:`~repro.core.Estimator` defaults to the paper's
+    ``euler`` element mode (explicit Euler on the backward HJB ODEs) --
+    faithful to the paper's experiments, but EXPLICIT-EULER-UNSTABLE once
+    a block's information Riccati gets stiff (small R / large ``nsub *
+    dt``): block elements overflow and the combined estimate silently
+    turns NaN (for the test Wiener-velocity model at dt = 0.1 this
+    happens from 4 blocks of ``nsub=10`` up).  A serving engine cannot
+    pick its record lengths, so it must not default to a mode whose
+    stability depends on them: the engines default to the ``discrete``
+    mode (exact substep composition -- unconditionally stable, parallel
+    == sequential to round-off) and leave ``euler`` opt-in via
+    ``options=``.
+    """
+    return get_method(method).options_cls(mode="discrete")
+
+
+@dataclasses.dataclass
+class WaveItem:
+    """One queued unit of work: a whole record or one window snapshot.
+
+    ``key`` is the caller's handle (ticket / track id).  ``x_init`` is an
+    optional warm-start trajectory covering the item's real grid
+    (``(N+1, nx)``; padded rows repeat the final state).  ``prior`` is an
+    optional information-form ``(S0, v0)`` left-boundary override.
+    """
+
+    key: int
+    ts: np.ndarray
+    y: np.ndarray
+    n_pad: int
+    submit_t: float = 0.0          # perf_counter at submit; latency readout
+    x_init: Optional[np.ndarray] = None
+    prior: Optional[Tuple[np.ndarray, np.ndarray]] = None
+
+
+def validate_record(ts, y) -> Tuple[np.ndarray, np.ndarray]:
+    """Shared submit-time validation: shapes and a strictly-increasing
+    time grid.  Returns ``(ts, y)`` as numpy arrays."""
+    ts = np.asarray(ts)
+    y = np.asarray(y)
+    if y.ndim != 2 or y.shape[0] < 1:
+        raise ValueError(
+            f"y must be (N, ny) with N >= 1, got shape {y.shape}")
+    if ts.shape != (y.shape[0] + 1,):
+        raise ValueError(
+            f"ts must be (N+1,) = {(y.shape[0] + 1,)}, got {ts.shape}")
+    if not np.all(np.diff(ts) > 0):
+        raise ValueError(
+            "ts must be strictly increasing (padding extrapolates the "
+            f"grid with the final step, which a non-monotone or repeated "
+            f"time point would corrupt); got ts={ts!r}")
+    return ts, y
+
+
+def take_wave(queue: Deque[WaveItem], batch: int) -> List[WaveItem]:
+    """FIFO wave: the oldest item fixes the bucket; later same-bucket
+    items top the wave up to ``batch`` (others keep their place).
+    Scanning stops as soon as the wave is full, so draining Q queued
+    items is O(Q), not O(Q^2/batch).  Mutates ``queue`` in place."""
+    n_pad = queue[0].n_pad
+    wave: List[WaveItem] = []
+    keep: Deque[WaveItem] = collections.deque()
+    while queue and len(wave) < batch:
+        item = queue.popleft()
+        if item.n_pad == n_pad:
+            wave.append(item)
+        else:
+            keep.append(item)
+    keep.extend(queue)                 # untouched tail, order preserved
+    queue.clear()
+    queue.extend(keep)
+    return wave
+
+
+def _pad_trajectory(x: np.ndarray, n_pad: int) -> np.ndarray:
+    """Extend a warm-start trajectory ``(N+1, nx)`` to ``(n_pad+1, nx)``
+    by repeating the final state (the padded tail follows the drift from
+    there; the repeated point is only a linearisation/warm-start hint)."""
+    extra = n_pad + 1 - x.shape[0]
+    if extra <= 0:
+        return x[:n_pad + 1]
+    return np.concatenate([x, np.repeat(x[-1:], extra, axis=0)], axis=0)
+
+
+def pack_wave(wave: List[WaveItem], batch: int):
+    """Pad + stack a same-bucket wave into stacked-problem arrays.
+
+    Returns ``(ts_b, ys_b, mask_b, x_init_b, prior_b)`` with exactly
+    ``batch`` rows -- short waves recycle row 0.  ``x_init_b`` is a
+    ``(batch, n_pad+1, nx)`` array when ANY item carries a warm start
+    (items without one get their prior-mean-free default only if ALL lack
+    it -- mixing is resolved by requiring the caller to be consistent);
+    ``prior_b`` similarly stacks per-row ``(S0, v0)``.
+    """
+    n_pad = wave[0].n_pad
+    padded = [pad_record(it.ts, it.y, n_pad) for it in wave]
+    rows = padded + [padded[0]] * (batch - len(padded))
+    ts_b = jnp.asarray(np.stack([r[0] for r in rows]))
+    ys_b = jnp.asarray(np.stack([r[1] for r in rows]))
+    mask_b = jnp.asarray(np.stack([r[2] for r in rows]))
+
+    x_init_b = None
+    if any(it.x_init is not None for it in wave):
+        if not all(it.x_init is not None for it in wave):
+            raise ValueError(
+                "wave mixes items with and without warm-start trajectories")
+        xi_rows = [_pad_trajectory(np.asarray(it.x_init), n_pad)
+                   for it in wave]
+        xi_rows += [xi_rows[0]] * (batch - len(xi_rows))
+        x_init_b = jnp.asarray(np.stack(xi_rows))
+
+    prior_b = None
+    if any(it.prior is not None for it in wave):
+        if not all(it.prior is not None for it in wave):
+            raise ValueError(
+                "wave mixes items with and without boundary priors")
+        S_rows = [np.asarray(it.prior[0]) for it in wave]
+        v_rows = [np.asarray(it.prior[1]) for it in wave]
+        S_rows += [S_rows[0]] * (batch - len(S_rows))
+        v_rows += [v_rows[0]] * (batch - len(v_rows))
+        prior_b = (jnp.asarray(np.stack(S_rows)),
+                   jnp.asarray(np.stack(v_rows)))
+    return ts_b, ys_b, mask_b, x_init_b, prior_b
+
+
+def record_wave_metrics(prefix: str, wave: List[WaveItem], n_pad: int,
+                        batch: int, queue_depth: int) -> None:
+    """Per-wave obs readout under ``prefix`` (``engine`` / ``stream``):
+    waves/completed/recycled counters, interval-padding accounting, the
+    cumulative ``<prefix>.padding_waste`` gauge, wave occupancy, queue
+    depth and the per-item submit-to-done latency histogram."""
+    now = time.perf_counter()
+    real = sum(it.y.shape[0] for it in wave)
+    solved = n_pad * batch
+    obs.inc(f"{prefix}.waves")
+    obs.inc(f"{prefix}.completed", len(wave))
+    obs.inc(f"{prefix}.recycled_rows", batch - len(wave))
+    obs.inc(f"{prefix}.real_intervals", real)
+    obs.inc(f"{prefix}.padded_intervals", solved)
+    obs.record(f"{prefix}.wave_occupancy", len(wave) / batch,
+               buckets=[i / 20 for i in range(21)])
+    # cumulative padding waste: fraction of solved intervals that were
+    # padding or recycled rows (0 = perfect packing)
+    c = obs.REGISTRY.counter
+    total_real = c(f"{prefix}.real_intervals").value
+    total_solved = c(f"{prefix}.padded_intervals").value
+    if total_solved:
+        obs.set_gauge(f"{prefix}.padding_waste",
+                      1.0 - total_real / total_solved)
+    obs.set_gauge(f"{prefix}.queue_depth", queue_depth)
+    latency = ("engine.record_latency_seconds" if prefix == "engine"
+               else f"{prefix}.window_latency_seconds")
+    for it in wave:
+        obs.record(latency, now - it.submit_t)

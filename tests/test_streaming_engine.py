@@ -1,0 +1,363 @@
+"""StreamingEngine: fixed-lag windows must agree with one-shot offline
+solves, eviction/commit bookkeeping, threaded push/solve, validation, and
+the ``stream.*`` obs taxonomy."""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from helpers import coordinated_turn, wiener_velocity
+from repro import obs
+from repro.core import (
+    Estimator, IteratedOptions, ParallelOptions, Problem, simulate_linear,
+    simulate_nonlinear, time_grid,
+)
+from repro.serving import StreamingEngine
+
+NSUB = 5
+OPTIONS = ParallelOptions(nsub=NSUB, mode="discrete")
+
+
+def _linear_data(N, seed=0, T=None):
+    model = wiener_velocity()
+    ts = time_grid(0.0, (N / 10.0) if T is None else T, N)
+    _, y = simulate_linear(model, ts, jax.random.PRNGKey(seed))
+    return model, np.asarray(ts), np.asarray(y)
+
+
+def _stream(eng, tid, ts, y, chunk):
+    """Push (ts, y) in ``chunk``-interval pieces, draining after each."""
+    N = y.shape[0]
+    i = 0
+    while i < N:
+        k = min(chunk, N - i)
+        eng.push(tid, ts[i + 1:i + 1 + k], y[i:i + k])
+        i += k
+        eng.run()
+
+
+# -- agreement with one-shot offline solves -------------------------------
+
+
+def test_linear_window_agrees_with_offline_exactly():
+    """The live window of a fixed-lag stream equals the full offline MAP
+    restricted to the window -- the information-form prior handoff is
+    exact for linear models (rtol 1e-9 demanded, ~1e-15 observed)."""
+    model, ts, y = _linear_data(60)
+    ref = np.asarray(
+        Estimator(model, options=OPTIONS).solve(
+            Problem.single(model, ts, y)).x)
+    eng = StreamingEngine(model, lag=15, batch=4, options=OPTIONS)
+    tid = eng.open_track(ts[0])
+    _stream(eng, tid, ts, y, chunk=7)
+    full = np.asarray(eng.estimate(tid).x)
+    assert full.shape == ref.shape
+    scale = np.max(np.abs(ref))
+    lag = eng.lag
+    np.testing.assert_allclose(
+        full[-lag - 1:], ref[-lag - 1:], rtol=0, atol=1e-9 * scale)
+
+
+def test_linear_committed_state_is_truncated_offline_map():
+    """A committed (evicted) state equals the offline MAP of the problem
+    truncated at the window end at eviction time -- the chained-window
+    exactness invariant, point by point."""
+    model, ts, y = _linear_data(40)
+    est = Estimator(model, options=OPTIONS)
+    lag = 10
+    eng = StreamingEngine(model, lag=lag, batch=4, options=OPTIONS)
+    tid = eng.open_track(ts[0])
+    scale = np.max(np.abs(y))
+    for j in range(1, y.shape[0] + 1):
+        eng.push(tid, ts[j:j + 1], y[j - 1:j])
+        eng.run()
+        committed = eng.committed(tid)
+        if committed is None:
+            continue
+        # the point evicted by THIS solve saw measurements up to j
+        k = committed.x.shape[0] - 1
+        off = est.solve(Problem.ragged(model, [(ts[:j + 1], y[:j])]))[0]
+        np.testing.assert_allclose(
+            committed.x[k], np.asarray(off.x)[k], rtol=0, atol=1e-9 * scale)
+        np.testing.assert_allclose(
+            committed.S[k], np.asarray(off.S)[k], rtol=0,
+            atol=1e-9 * np.max(np.abs(np.asarray(off.S))))
+
+
+def test_linear_fixed_lag_error_decays_with_lag():
+    """The committed history converges to the full offline MAP as the lag
+    grows (fixed-lag truncation error, not a bug)."""
+    model, ts, y = _linear_data(60)
+    ref = np.asarray(
+        Estimator(model, options=OPTIONS).solve(
+            Problem.single(model, ts, y)).x)
+    scale = np.max(np.abs(ref))
+
+    def stream_err(lag):
+        eng = StreamingEngine(model, lag=lag, batch=4, options=OPTIONS)
+        tid = eng.open_track(ts[0])
+        _stream(eng, tid, ts, y, chunk=10)
+        full = np.asarray(eng.estimate(tid).x)
+        return np.max(np.abs(full - ref)) / scale
+
+    e_short, e_long = stream_err(5), stream_err(25)
+    assert e_long < e_short
+    assert e_long < 1e-3
+
+
+def test_nonlinear_streaming_matches_offline():
+    """Warm-started nonlinear streaming agrees with the one-shot iterated
+    offline solve (rtol 1e-6 demanded; both converged, ~1e-9 observed).
+    Lag exceeds the track length so no eviction -- this isolates the
+    streaming plumbing (snapshots, per-row warm starts) from the
+    fixed-lag truncation, which the linear tests quantify."""
+    model = coordinated_turn()
+    N = 50
+    ts = time_grid(0.0, 5.0, N)
+    _, y = simulate_nonlinear(model, ts, jax.random.PRNGKey(0))
+    ts, y = np.asarray(ts), np.asarray(y)
+    opts = IteratedOptions(iterations=12,
+                           inner=ParallelOptions(nsub=NSUB, mode="discrete"))
+    ref = np.asarray(
+        Estimator(model, options=opts).solve(
+            Problem.single(model, ts, y)).x)
+    eng = StreamingEngine(model, lag=128, batch=4, options=opts)
+    tid = eng.open_track(ts[0])
+    _stream(eng, tid, ts, y, chunk=10)
+    full = np.asarray(eng.estimate(tid).x)
+    scale = np.max(np.abs(ref))
+    np.testing.assert_allclose(full, ref, rtol=0, atol=1e-6 * scale)
+
+
+def test_nonlinear_fixed_lag_window():
+    """With eviction the nonlinear window tracks the offline MAP to the
+    fixed-lag truncation error, which shrinks as the lag grows."""
+    model = coordinated_turn()
+    N = 60
+    ts = time_grid(0.0, 6.0, N)
+    _, y = simulate_nonlinear(model, ts, jax.random.PRNGKey(1))
+    ts, y = np.asarray(ts), np.asarray(y)
+    opts = IteratedOptions(iterations=8,
+                           inner=ParallelOptions(nsub=NSUB, mode="discrete"))
+    ref = np.asarray(
+        Estimator(model, options=opts).solve(
+            Problem.single(model, ts, y)).x)
+    scale = np.max(np.abs(ref))
+
+    def window_err(lag):
+        eng = StreamingEngine(model, lag=lag, batch=4, options=opts)
+        tid = eng.open_track(ts[0])
+        _stream(eng, tid, ts, y, chunk=10)
+        win = np.asarray(eng.estimate(tid).x)[-lag - 1:]
+        return np.max(np.abs(win - ref[-lag - 1:])) / scale
+
+    e_short, e_long = window_err(10), window_err(40)
+    assert e_long < e_short
+    assert e_long < 1e-2
+
+
+# -- eviction / bookkeeping ----------------------------------------------
+
+
+def test_eviction_boundaries():
+    model, ts, y = _linear_data(40)
+    lag = 10
+    eng = StreamingEngine(model, lag=lag, batch=2, options=OPTIONS)
+    tid = eng.open_track(ts[0])
+    _stream(eng, tid, ts, y, chunk=10)
+    track = eng._tracks[tid]
+    # window retains exactly lag intervals after each eviction-triggering
+    # solve; everything older is committed
+    assert track.y.shape[0] == lag
+    assert track.offset == 40 - lag
+    committed = eng.committed(tid)
+    assert committed.x.shape == (40 - lag, model.nx)
+    window = eng.window(tid)
+    assert window.x.shape == (lag + 1, model.nx)
+    full = eng.estimate(tid)
+    assert full.x.shape == (41, model.nx)
+    # stitch is committed + window, in order
+    np.testing.assert_array_equal(full.x[:40 - lag], committed.x)
+    np.testing.assert_array_equal(full.x[40 - lag:], window.x)
+    # close() returns the same final estimate and removes the track
+    final = eng.close(tid)
+    np.testing.assert_array_equal(final.x, full.x)
+    assert eng.tracks() == []
+    with pytest.raises(KeyError, match="unknown track"):
+        eng.estimate(tid)
+
+
+def test_no_eviction_before_lag():
+    model, ts, y = _linear_data(10)
+    eng = StreamingEngine(model, lag=20, batch=2, options=OPTIONS)
+    tid = eng.open_track(ts[0])
+    _stream(eng, tid, ts, y, chunk=5)
+    assert eng.committed(tid) is None
+    assert eng.estimate(tid).x.shape == (11, wiener_velocity().nx)
+
+
+def test_multi_track_waves_batch_together():
+    """Windows from different tracks share waves: 4 tracks at the same
+    bucket drain in ceil(4/batch) waves, and each track's estimate
+    matches its own single-track stream."""
+    model, ts, y = _linear_data(20)
+    eng = StreamingEngine(model, lag=8, batch=2, options=OPTIONS)
+    tids = [eng.open_track(ts[0]) for _ in range(4)]
+    datasets = []
+    for i, tid in enumerate(tids):
+        _, yi = simulate_linear(model, ts, jax.random.PRNGKey(100 + i))
+        datasets.append(np.asarray(yi))
+        eng.push(tid, ts[1:], datasets[-1])
+    assert eng.due() == 4
+    solved = eng.run()
+    assert solved == 4
+    assert eng.waves == 2          # batch=2 -> two full waves, no recycling
+    for tid, yi in zip(tids, datasets):
+        solo = StreamingEngine(model, lag=8, batch=2, options=OPTIONS)
+        stid = solo.open_track(ts[0])
+        solo.push(stid, ts[1:], yi)
+        solo.run()
+        np.testing.assert_allclose(
+            np.asarray(eng.estimate(tid).x),
+            np.asarray(solo.estimate(stid).x), rtol=0, atol=1e-10)
+
+
+def test_threaded_push_and_solve():
+    """Client threads push concurrently while a solver thread drains;
+    every track's final estimate matches its offline reference window."""
+    model, ts, y = _linear_data(30)
+    lag = 30                        # no eviction: final estimate == offline
+    eng = StreamingEngine(model, lag=lag, batch=2, options=OPTIONS)
+    est = Estimator(model, options=OPTIONS)
+    n_tracks = 4
+    tids = [eng.open_track(ts[0]) for _ in range(n_tracks)]
+    datasets = [
+        np.asarray(simulate_linear(model, ts, jax.random.PRNGKey(7 + i))[1])
+        for i in range(n_tracks)]
+    stop = threading.Event()
+
+    def solver():
+        while not stop.is_set() or eng.due():
+            if not eng.step():
+                stop.wait(0.001)
+
+    def client(tid, yi):
+        for i in range(0, 30, 6):
+            eng.push(tid, ts[i + 1:i + 7], yi[i:i + 6])
+
+    solver_t = threading.Thread(target=solver)
+    solver_t.start()
+    clients = [threading.Thread(target=client, args=(tid, yi))
+               for tid, yi in zip(tids, datasets)]
+    for t in clients:
+        t.start()
+    for t in clients:
+        t.join()
+    stop.set()
+    solver_t.join()
+    assert eng.due() == 0
+    for tid, yi in zip(tids, datasets):
+        ref = np.asarray(est.solve(Problem.single(model, ts, yi)).x)
+        got = np.asarray(eng.estimate(tid).x)
+        np.testing.assert_allclose(got, ref, rtol=0,
+                                   atol=1e-9 * np.max(np.abs(ref)))
+
+
+def test_push_during_solve_marks_due_again():
+    model, ts, y = _linear_data(20)
+    eng = StreamingEngine(model, lag=8, batch=2, options=OPTIONS)
+    tid = eng.open_track(ts[0])
+    eng.push(tid, ts[1:11], y[:10])
+    eng.run()
+    assert eng.due() == 0
+    eng.push(tid, ts[11:21], y[10:20])
+    assert eng.due() == 1
+
+
+# -- validation ----------------------------------------------------------
+
+
+def test_push_validation():
+    model, ts, y = _linear_data(10)
+    eng = StreamingEngine(model, lag=8, batch=2, options=OPTIONS)
+    tid = eng.open_track(ts[0])
+    with pytest.raises(ValueError, match="strictly increasing"):
+        eng.push(tid, [0.2, 0.1], y[:2])
+    with pytest.raises(ValueError, match="strictly after"):
+        eng.push(tid, [0.0], y[:1])          # not after t0
+    with pytest.raises(ValueError, match="measurement dimension"):
+        eng.push(tid, ts[1:2], np.zeros((1, 3)))
+    with pytest.raises(ValueError, match=r"\(K, ny\)"):
+        eng.push(tid, ts[1:3], y[:1])        # K mismatch
+    with pytest.raises(KeyError, match="unknown track"):
+        eng.push(99, ts[1:2], y[:1])
+    eng.push(tid, ts[1:3], y[:2])
+    with pytest.raises(ValueError, match="strictly after"):
+        eng.push(tid, ts[2:4], y[1:3])       # overlaps the last point
+
+
+def test_estimate_before_solve_raises():
+    model, ts, y = _linear_data(10)
+    eng = StreamingEngine(model, lag=8, batch=2, options=OPTIONS)
+    tid = eng.open_track(ts[0])
+    with pytest.raises(ValueError, match="no estimate yet"):
+        eng.estimate(tid)
+    eng.push(tid, ts[1:], y)
+    with pytest.raises(ValueError, match="no estimate yet"):
+        eng.window(tid)                      # pushed but not solved
+    eng.run()
+    assert eng.estimate(tid).x.shape == (11, model.nx)
+
+
+def test_constructor_validation():
+    model = wiener_velocity()
+    with pytest.raises(ValueError, match="lag"):
+        StreamingEngine(model, lag=0)
+    with pytest.raises(ValueError, match="batch"):
+        StreamingEngine(model, batch=0)
+
+
+def test_default_options_are_numerically_robust():
+    """Regression: the serving default must survive window lengths where
+    the paper-faithful euler mode overflows (4+ blocks of nsub=10 at
+    dt=0.1 on the Wiener-velocity model used to yield silent NaN)."""
+    model, ts, y = _linear_data(45, T=4.5)   # dt = 0.1, bucket 80
+    eng = StreamingEngine(model, lag=50, batch=2)    # options=None
+    tid = eng.open_track(ts[0])
+    _stream(eng, tid, ts, y, chunk=45)
+    assert np.isfinite(np.asarray(eng.estimate(tid).x)).all()
+
+
+# -- observability -------------------------------------------------------
+
+
+def test_stream_obs_taxonomy():
+    was = obs.enabled()
+    obs.reset()
+    obs.enable()
+    try:
+        model, ts, y = _linear_data(20)
+        eng = StreamingEngine(model, lag=8, batch=2, options=OPTIONS)
+        t0, t1 = eng.open_track(ts[0]), eng.open_track(ts[0])
+        for tid in (t0, t1):
+            eng.push(tid, ts[1:11], y[:10])
+            eng.push(tid, ts[11:21], y[10:20])
+        eng.run()
+        eng.close(t1)
+        snap = obs.snapshot()
+        counters = snap["counters"]
+        assert counters["stream.tracks_opened"] == 2
+        assert counters["stream.pushes"] == 4
+        assert counters["stream.pushed_intervals"] == 40
+        assert counters["stream.waves"] >= 1
+        assert counters["stream.completed"] == 2
+        assert counters["stream.evicted_intervals"] == 2 * (20 - 8)
+        assert snap["gauges"]["stream.tracks"] == 1
+        assert "stream.padding_waste" in snap["gauges"]
+        hists = snap["histograms"]
+        assert hists["stream.window_latency_seconds"]["count"] == 2
+        assert "stream.wave_occupancy" in hists
+    finally:
+        obs.reset()
+        (obs.enable if was else obs.disable)()

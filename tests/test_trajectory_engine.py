@@ -131,3 +131,65 @@ def test_sharded_batch_path():
         ref = par.solve(Problem.single(
             model, jnp.asarray(ts), jnp.asarray(y)))
         np.testing.assert_allclose(sol.x, ref.x, atol=1e-6, rtol=0)
+
+
+def test_submit_rejects_non_monotone_ts():
+    """Regression: a non-monotone / repeated time grid used to be padded
+    silently (the padded tail extrapolates with dt_last, so a reversed or
+    zero final step produced a broken problem); it must fail at submit."""
+    model = wiener_velocity()
+    engine = _engine(model)
+    ts, y = _record(model, 12, 70)
+    bad = ts.copy()
+    bad[5], bad[6] = bad[6], bad[5]                  # swap -> non-monotone
+    with pytest.raises(ValueError, match="strictly increasing"):
+        engine.submit(bad, y)
+    with pytest.raises(ValueError, match="strictly increasing"):
+        engine.submit(np.concatenate([ts[:-1], ts[-2:-1]]), y)  # repeat
+    assert engine.pending() == 0                     # nothing half-queued
+
+
+def test_collect_ticket_filter_prevents_races():
+    """Regression: collect() popped EVERYTHING, so a concurrent collector
+    could steal another client's results between its run() and collect().
+    collect(tickets=...) pops only those tickets."""
+    model = wiener_velocity()
+    engine = _engine(model, batch=2)
+    t_a = engine.submit(*_record(model, 12, 80))
+    t_b = engine.submit(*_record(model, 12, 81))
+    engine.run()
+    got_b = engine.collect(tickets=[t_b])
+    assert [t for t, _ in got_b] == [t_b]
+    # A's result is still there for A, plus unknown tickets are ignored
+    got_a = engine.collect(tickets=[t_a, 999])
+    assert [t for t, _ in got_a] == [t_a]
+    assert engine.collect() == []                    # nothing left behind
+
+
+def test_estimate_explains_unredeemable_tickets():
+    model = wiener_velocity()
+    engine = _engine(model, batch=2)
+    ticket = engine.submit(*_record(model, 12, 90))
+    engine.run()
+    thief = engine.collect()                          # steals everything
+    assert [t for t, _ in thief] == [ticket]
+    assert "already collected" in engine.describe_ticket(ticket)
+    assert "never issued" in engine.describe_ticket(12345)
+    queued = engine.submit(*_record(model, 12, 91))
+    assert "queued" in engine.describe_ticket(queued)
+    engine.run()
+    assert "finished" in engine.describe_ticket(queued)
+
+
+def test_default_options_are_numerically_robust():
+    """Regression: the engine default inherited the Estimator's euler
+    element mode, which silently NaNs on long-enough records (explicit
+    Euler on a stiff block Riccati -- 40+ intervals of the dt=0.1
+    Wiener-velocity model).  The serving default is now the discrete
+    mode; long records must stay finite."""
+    model = wiener_velocity()
+    engine = TrajectoryEngine(model, batch=2)        # options=None
+    ts = time_grid(0.0, 8.0, 80)                     # dt = 0.1
+    _, y = simulate_linear(model, ts, jax.random.PRNGKey(99))
+    [sol] = engine.estimate([(np.asarray(ts), np.asarray(y))])
+    assert np.isfinite(np.asarray(sol.x)).all()

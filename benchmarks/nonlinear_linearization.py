@@ -1,0 +1,70 @@
+"""Linearisation strategies on the coordinated-turn model: per-iteration
+wall time and final Onsager-Machlup cost of the iterated smoother with
+``taylor`` (Jacobian IEKS) vs sigma-point SLR (``unscented`` /
+``cubature``).
+
+One AOT-compiled solve per (strategy, T); ``us_per_iter`` is the full
+solve wall time divided by the iteration count (every iteration is one
+linearise + solve pass), ``derived`` carries the final cost -- the
+accuracy axis the timing is traded against (docs/LINEARIZATION.md).
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import jax
+import jax.numpy as jnp
+
+STRATEGIES = ("taylor", "unscented", "cubature")
+
+
+def run(T_list=(64, 256), nsub=10, mode="discrete", repeats=3,
+        iterations=5, strategies=STRATEGIES, smoke=False):
+    from repro.configs.coordinated_turn import CoordinatedTurnConfig
+    from repro.core import (
+        Estimator, ParallelOptions, Problem, SigmaPointOptions,
+        simulate_nonlinear, time_grid,
+    )
+
+    if smoke:
+        T_list, repeats, iterations = (8,), 1, 2
+    ccfg = CoordinatedTurnConfig(iterations=iterations)
+    model = ccfg.model()
+    rows = []
+    for T in T_list:
+        N = T * nsub
+        ts = time_grid(ccfg.t0, ccfg.tf, N, dtype=jnp.float32)
+        _, y = simulate_nonlinear(model, ts, jax.random.PRNGKey(3))
+        for strategy in strategies:
+            est = Estimator(
+                model, method="sigma_point",
+                options=SigmaPointOptions(
+                    iterations=iterations, linearization=strategy,
+                    inner=ParallelOptions(nsub=nsub, mode=mode)))
+            compiled = est.lower(
+                Problem.single(model, ts, y)).compile()   # AOT executable
+            fn = lambda yy: compiled(ts, yy)
+            cost = float(fn(y).cost)
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                fn(y).x.block_until_ready()
+            dt = (time.perf_counter() - t0) / repeats
+            rows.append({
+                "name": f"nonlin/{strategy}/T{T}",
+                "us_per_call": dt * 1e6 / iterations,
+                "derived": f"final_cost={cost:.4f}",
+            })
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,8 @@ committed ``benchmarks/baselines/BENCH_seed.json`` with
 
   fig1/*    paper Fig. 1  (linear Wiener velocity, seq vs parallel)
   fig2/*    paper Fig. 2  (coordinated-turn iterated MAP)
+  nonlin/*  linearisation strategies (taylor vs sigma-point SLR):
+            per-iteration wall time + final OM cost
   kern/*    kernel micro-benchmarks
   batch/*   request-axis throughput (problems/sec vs batch size)
   serve/*   TrajectoryEngine tracks/sec + latency percentiles
@@ -32,8 +34,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 # fixed RNG seeds per section -- recorded into the JSON artifact so every
 # number is reproducible from the file alone
-SEEDS = {"fig1": 0, "fig2": 1, "kern": 0, "batch": 0, "serve": 0,
-         "stream": 0, "dist": 0}
+SEEDS = {"fig1": 0, "fig2": 1, "nonlin": 3, "kern": 0, "batch": 0,
+         "serve": 0, "stream": 0, "dist": 0}
 
 
 def _dist_rows(smoke: bool) -> list:
@@ -65,7 +67,8 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes: CI bit-rot check for every section")
     ap.add_argument("--only", default="",
-                    help="comma list: fig1,fig2,kern,batch,serve,stream,dist")
+                    help="comma list: fig1,fig2,nonlin,kern,batch,serve,"
+                         "stream,dist")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="write the BENCH_<name>.json artifact here "
                          "(CI: BENCH_smoke.json)")
@@ -79,7 +82,7 @@ def main() -> None:
     rows = []
     from benchmarks import (
         batch_throughput, engine_latency, fig1_linear, fig2_nonlinear,
-        kernels_bench, streaming_latency,
+        kernels_bench, nonlinear_linearization, streaming_latency,
     )
     if only is None or "fig1" in only:
         if args.smoke:
@@ -96,6 +99,13 @@ def main() -> None:
             rows += fig2_nonlinear.run(
                 T_list=(64, 128) if args.fast else (64, 128, 256, 512),
                 repeats=2 if args.fast else 5)
+    if only is None or "nonlin" in only:
+        if args.smoke:
+            rows += nonlinear_linearization.run(smoke=True)
+        else:
+            rows += nonlinear_linearization.run(
+                T_list=(64,) if args.fast else (64, 256),
+                repeats=2 if args.fast else 3)
     if only is None or "kern" in only:
         rows += kernels_bench.run(smoke=args.smoke)
     if only is None or "batch" in only:

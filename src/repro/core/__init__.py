@@ -41,6 +41,7 @@ from .options import (
     KernelOptions,
     ParallelOptions,
     SequentialOptions,
+    SigmaPointOptions,
     SolverOptions,
     TwoFilterOptions,
 )
@@ -89,7 +90,7 @@ __all__ = [
     "Estimator", "Problem", "Solution",
     "SolverOptions", "SequentialOptions", "ParallelOptions",
     "TwoFilterOptions", "KernelOptions", "DistributedOptions",
-    "IteratedOptions",
+    "IteratedOptions", "SigmaPointOptions",
     "PaddingReport", "BucketInfo", "ExecutableCache",
     "cache_stats", "clear_cache",
     # registry

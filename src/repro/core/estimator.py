@@ -407,7 +407,8 @@ def _solve_arrays(model: Model, spec: MethodSpec, options, ts, y, mask,
             iterations=options.iterations,
             divergence_correction=options.divergence_correction,
             x_init=x_init, measurement_mask=mask, prior=prior,
-            track_costs=diagnostics)
+            track_costs=diagnostics,
+            linearization=options.linearization)
         if not diagnostics:
             return Solution(x=sol.x, S=sol.S, v=sol.v, cov=sol.cov)
         return Solution(x=sol.x, S=sol.S, v=sol.v, cov=sol.cov,
@@ -447,7 +448,10 @@ class Estimator:
         interchangeable here -- e.g. ``"parallel_kernel"`` (the Pallas
         lane-major scan, ``docs/KERNELS.md``) runs through the same
         executable cache, vmap/shard_map batching and AOT ``lower`` path
-        as the jnp methods.
+        as the jnp methods.  Iterated nonlinear methods
+        (``"sigma_point"``) are NOT grid solvers: they require a
+        ``NonlinearSDE`` and run the iterated linearisation loop around
+        the linear method named by their options' ``inner_method``.
       options: instance of the method's options class
         (:class:`~repro.core.options.SolverOptions` subclass); for
         nonlinear models either that (outer loop defaults) or an
@@ -480,15 +484,54 @@ class Estimator:
         self.model = model
         self.method = method
         self.options = self._resolve_options(options)
+        # The spec that actually solves each (linearised) grid problem:
+        # iterated nonlinear methods (spec.nonlinear, e.g. "sigma_point")
+        # delegate to their options' inner_method; every other method IS
+        # the grid solver.
+        self._grid_spec = (get_method(self.options.inner_method)
+                           if self._spec.nonlinear else self._spec)
         self.mesh = as_mesh(mesh)
         self.batch_axis = batch_axis
         self.diagnostics = diagnostics
         self._cache = _CACHE if cache is None else cache
-        self._distributed = issubclass(self._spec.options_cls,
+        self._distributed = issubclass(self._grid_spec.options_cls,
                                        DistributedOptions)
 
     def _resolve_options(self, options):
         cls = self._spec.options_cls
+        if self._spec.nonlinear:
+            # Iterated nonlinear method (e.g. "sigma_point"): the options
+            # ARE the outer-loop options; the grid solver is named by
+            # options.inner_method and its options ride in options.inner.
+            if not isinstance(self.model, NonlinearSDE):
+                raise TypeError(
+                    f"method {self.method!r} is an iterated nonlinear "
+                    f"method and needs a NonlinearSDE model, got "
+                    f"{type(self.model).__name__}")
+            if options is None:
+                options = cls()
+            elif isinstance(options, SolverOptions):
+                options = cls(inner=options)
+            elif not isinstance(options, cls):
+                raise TypeError(
+                    f"options for method {self.method!r} must be "
+                    f"{cls.__name__} (or a bare inner-method SolverOptions),"
+                    f" got {type(options).__name__}")
+            inner_spec = get_method(options.inner_method)
+            if inner_spec.nonlinear:
+                raise ValueError(
+                    f"inner_method {options.inner_method!r} is itself an "
+                    f"iterated nonlinear method; it must name a linear grid "
+                    f"solver (e.g. 'parallel_rts', 'sequential_rts')")
+            inner = (options.inner if options.inner is not None
+                     else inner_spec.options_cls())
+            if not isinstance(inner, inner_spec.options_cls):
+                raise TypeError(
+                    f"{cls.__name__}.inner for inner_method "
+                    f"{options.inner_method!r} must be "
+                    f"{inner_spec.options_cls.__name__}, got "
+                    f"{type(inner).__name__}")
+            return options.replace(inner=inner)
         if isinstance(self.model, NonlinearSDE):
             if options is None:
                 options = IteratedOptions()
@@ -499,6 +542,12 @@ class Estimator:
                     f"options for nonlinear method {self.method!r} must be "
                     f"{cls.__name__} or IteratedOptions, got "
                     f"{type(options).__name__}")
+            if type(options) is not IteratedOptions:
+                raise TypeError(
+                    f"{type(options).__name__} belongs to an iterated "
+                    f"nonlinear method, not method={self.method!r}; use "
+                    f"the method it was registered with (e.g. "
+                    f"method='sigma_point') or plain IteratedOptions")
             inner = options.inner if options.inner is not None else cls()
             if not isinstance(inner, cls):
                 raise TypeError(
@@ -649,7 +698,7 @@ class Estimator:
             has_mask, has_xinit, has_prior, self.diagnostics,
             tuple((a.shape, str(a.dtype)) for a in args),
             tuple(axes))
-        model, spec, options = self.model, self._spec, self.options
+        model, spec, options = self.model, self._grid_spec, self.options
         spmd_axis = self._batch_spmd_axis(resolved) if (
             stacked and self._distributed) else None
 
@@ -738,6 +787,11 @@ class Estimator:
         """Host-side readout of per-solve diagnostics into the registry
         (concrete device arrays only -- never called from traced code)."""
         obs.inc("estimator.solves")
+        if isinstance(self.options, IteratedOptions):
+            lin = self.options.linearization
+            obs.inc(f"linearize.{lin.obs_name}.solves")
+            obs.set_gauge("linearize.sigma_points",
+                          lin.num_points(self.model.nx))
         if sol.cost is not None:
             obs.record("estimator.final_cost", np.mean(np.asarray(sol.cost)))
         if sol.cost_trace is not None:

@@ -45,6 +45,7 @@ def iterated_solve(
     measurement_mask: Optional[jnp.ndarray] = None,
     prior: Optional[Prior] = None,
     track_costs: bool = True,
+    linearization=None,
 ) -> Tuple[MAPSolution, Optional[jnp.ndarray], Optional[jnp.ndarray]]:
     """Continuous-time iterated MAP estimation (paper section 5.2).
 
@@ -72,7 +73,17 @@ def iterated_solve(
     the ``repro.obs`` registry by the Estimator).  ``track_costs=False``
     skips both trace evaluations (returning ``(solution, None, None)``)
     -- one model f/h sweep plus Q/R inversions saved per iteration.
+
+    ``linearization`` selects the per-iteration linearisation strategy
+    (``None`` = Taylor, i.e. the IEKS; a registered name or
+    :class:`repro.linearize.Linearization` instance -- sigma-point SLR
+    turns this into the iterated posterior-linearisation smoother).  The
+    cost trace is always the TRUE nonlinear Onsager-Machlup cost, so
+    traces are comparable across strategies.
     """
+    from repro.linearize import get_linearization
+
+    linearization = get_linearization(linearization)
     N = y.shape[0]
     if x_init is None:
         mean = (model.m0 if prior is None
@@ -92,7 +103,8 @@ def iterated_solve(
     def body(xbar, _):
         grid = grid_lqt_from_nonlinear(
             model, ts, y, xbar, divergence_correction=divergence_correction,
-            measurement_mask=measurement_mask, prior=prior)
+            measurement_mask=measurement_mask, prior=prior,
+            linearization=linearization)
         sol = solver(grid)
         aux = ((cost_of(sol.x), step_norm(sol.x, xbar))
                if track_costs else None)
@@ -104,7 +116,8 @@ def iterated_solve(
     x_last, aux = jax.lax.scan(body, x_init, None, length=iterations - 1)
     grid = grid_lqt_from_nonlinear(
         model, ts, y, x_last, divergence_correction=divergence_correction,
-        measurement_mask=measurement_mask, prior=prior)
+        measurement_mask=measurement_mask, prior=prior,
+        linearization=linearization)
     sol = solver(grid)
     if not track_costs:
         return sol, None, None

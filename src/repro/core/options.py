@@ -21,8 +21,13 @@ universal keyword soup on every entry point:
   axis names, ``devices_per_time``, ``carry_dtype`` of the redundant carry
   scan, ``fallback`` behaviour below 2 shards);
 * :class:`IteratedOptions` -- the iterated-linearisation (nonlinear) layer:
-  ``iterations`` / ``divergence_correction`` plus the ``inner`` linear
-  options forwarded to the method that solves each linearised subproblem.
+  ``iterations`` / ``divergence_correction`` / ``linearization`` plus the
+  ``inner`` linear options forwarded to the method that solves each
+  linearised subproblem;
+* :class:`SigmaPointOptions` -- the ``sigma_point`` method (iterated
+  posterior-linearisation smoother): :class:`IteratedOptions` with a
+  sigma-point SLR default linearisation and an ``inner_method`` naming the
+  linear solver backend each linearised subproblem runs on.
 
 Unknown option names fail at CONSTRUCTION time (``TypeError`` from the
 dataclass ``__init__``); value errors (bad ``mode``, non-positive ``nsub``)
@@ -232,11 +237,19 @@ class IteratedOptions:
     method-options instance to :class:`~repro.core.estimator.Estimator`
     for a nonlinear model is equivalent to
     ``IteratedOptions(inner=that_instance)``.
+
+    ``linearization`` selects how each iteration linearises the model: a
+    registered name (``"taylor"``, ``"unscented"``, ``"cubature"``,
+    ``"gauss_hermite"``) or a :class:`repro.linearize.Linearization`
+    instance.  Resolved to an instance at construction, so a bad name
+    fails here, not inside a trace, and the resolved strategy rides the
+    frozen options into the executable-cache key.
     """
 
     iterations: int = 5
     divergence_correction: bool = False
     inner: Optional[SolverOptions] = None
+    linearization: object = "taylor"
 
     def __post_init__(self) -> None:
         if not isinstance(self.iterations, int) or self.iterations < 1:
@@ -247,6 +260,37 @@ class IteratedOptions:
             raise TypeError(
                 f"inner must be a SolverOptions instance, got "
                 f"{type(self.inner).__name__}")
+        # Lazy import: repro.linearize imports jax at module load; options
+        # must stay importable without touching the solver stack.
+        from repro.linearize import get_linearization
+
+        object.__setattr__(self, "linearization",
+                           get_linearization(self.linearization))
 
     def replace(self, **changes) -> "IteratedOptions":
         return dataclasses.replace(self, **changes)
+
+
+@dataclasses.dataclass(frozen=True)
+class SigmaPointOptions(IteratedOptions):
+    """Options of the ``sigma_point`` method: the iterated
+    posterior-linearisation smoother (sigma-point SLR instead of Taylor).
+
+    ``inner_method`` names the registered LINEAR method each linearised
+    subproblem is solved with (``"parallel_rts"``, ``"sequential_rts"``,
+    ``"parallel_kernel"``, ``"distributed"``, ...); ``inner`` carries that
+    method's options (``None`` = its defaults).  ``linearization``
+    defaults to the unscented SLR family; any registered strategy --
+    including ``"taylor"``, which makes ``sigma_point`` coincide with the
+    plain IEKS -- is accepted.
+    """
+
+    linearization: object = "unscented"
+    inner_method: str = "parallel_rts"
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        if not isinstance(self.inner_method, str) or not self.inner_method:
+            raise ValueError(
+                f"inner_method must be a non-empty method name, "
+                f"got {self.inner_method!r}")

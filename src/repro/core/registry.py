@@ -20,9 +20,11 @@ from typing import Callable, Dict, NamedTuple, Optional, Tuple, Type
 
 from .options import (
     DistributedOptions,
+    IteratedOptions,
     KernelOptions,
     ParallelOptions,
     SequentialOptions,
+    SigmaPointOptions,
     SolverOptions,
     TwoFilterOptions,
 )
@@ -42,6 +44,14 @@ class MethodSpec(NamedTuple):
 
     def default_options(self) -> SolverOptions:
         return self.options_cls()
+
+    @property
+    def nonlinear(self) -> bool:
+        """True for methods whose options are the iterated-linearisation
+        layer (``IteratedOptions`` subclasses): they require a nonlinear
+        model and delegate each linearised subproblem to an inner linear
+        method instead of acting as a grid solver themselves."""
+        return issubclass(self.options_cls, IteratedOptions)
 
 
 _METHODS: Dict[str, MethodSpec] = {}
@@ -69,9 +79,10 @@ def register_method(
 
         options_cls = ParallelOptions
     elif not (isinstance(options_cls, type)
-              and issubclass(options_cls, SolverOptions)):
+              and issubclass(options_cls, (SolverOptions, IteratedOptions))):
         raise TypeError(
-            f"options_cls must be a SolverOptions subclass, got "
+            f"options_cls must be a SolverOptions subclass (or an "
+            f"IteratedOptions subclass for nonlinear methods), got "
             f"{options_cls!r}")
     if name in _METHODS and not overwrite:
         raise ValueError(f"method {name!r} already registered")
@@ -178,6 +189,18 @@ register_method(
         grid, o.nsub, o.mode, jitter=o.jitter,
         block0_fill=o.block0_fill, tf_fill=o.tf_fill),
     TwoFilterOptions)
+def _sigma_point_solver(grid: GridLQT, o: SigmaPointOptions) -> MAPSolution:
+    """``sigma_point`` is not a grid solver: the Estimator resolves its
+    ``inner_method`` and runs the iterated loop around THAT solver.  Only
+    a direct ``spec.solver(grid, options)`` call -- which would silently
+    skip the linearisation loop -- lands here."""
+    raise TypeError(
+        "method='sigma_point' is an iterated nonlinear method, not a grid "
+        "solver; use Estimator(model, method='sigma_point').solve(problem) "
+        "with a NonlinearSDE model")
+
+
+register_method("sigma_point", _sigma_point_solver, SigmaPointOptions)
 register_method(
     "sequential_rts",
     lambda grid, o: sequential_rts(grid, o.mode),

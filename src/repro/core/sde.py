@@ -116,22 +116,15 @@ class NonlinearSDE:
 
         Returns grid arrays (F, c, H, r) with ``f(x,t) ~= F x + c`` and
         ``h(x,t) ~= H x + r`` at each interval left point (section 4.4).
+        Delegates to :mod:`repro.linearize.taylor`, which holds the same
+        jacfwd-vmap computation this method used to inline.
         """
+        from repro.linearize.taylor import taylor_linearize_grid
+
         tl = ts[:-1]
         xb = xbar[:-1]
-
-        def lin_f(x, t):
-            F = jax.jacfwd(self.f, argnums=0)(x, t)
-            c = self.f(x, t) - F @ x
-            return F, c
-
-        def lin_h(x, t):
-            H = jax.jacfwd(self.h, argnums=0)(x, t)
-            r = self.h(x, t) - H @ x
-            return H, r
-
-        F, c = jax.vmap(lin_f)(xb, tl)
-        H, r = jax.vmap(lin_h)(xb, tl)
+        F, c = taylor_linearize_grid(self.f, xb, tl)
+        H, r = taylor_linearize_grid(self.h, xb, tl)
         return F, c, H, r
 
     def divergence_gradient(self, xbar: Array, ts: Array) -> Array:
@@ -213,11 +206,34 @@ def grid_lqt_from_nonlinear(
     divergence_correction: bool = False,
     measurement_mask: Optional[Array] = None,
     prior: Optional[Prior] = None,
+    linearization=None,
 ) -> GridLQT:
-    F, c, H, r = model.linearise(xbar, ts)
+    """Linearise the nonlinear model about ``xbar`` and time-reverse into
+    the grid LQT problem.
+
+    ``linearization`` selects the strategy (``None``/"taylor" = the
+    Jacobian path, unchanged from before the subsystem existed).  SLR
+    strategies return a residual covariance per grid point, folded into
+    the noise as ``Q + Omega_f`` / ``R + Omega_h`` -- the
+    posterior-linearisation construction; their spread covariance is the
+    model's ``P0`` (scaled by the strategy's ``spread``), a fixed proxy
+    until posterior covariances are plumbed through.
+    """
+    from repro.linearize import get_linearization
+
+    lin_strategy = get_linearization(linearization)
     tl = ts[:-1]
     Q = model._eval(model.Q, tl)
     R = model._eval(model.R, tl)
+    if not lin_strategy.has_residual:
+        F, c, H, r = model.linearise(xbar, ts)
+    else:
+        xb = xbar[:-1]
+        covs = jnp.broadcast_to(model.P0, xb.shape[:1] + model.P0.shape)
+        F, c, Of = lin_strategy.linearize_grid(model.f, xb, tl, covs)
+        H, r, Oh = lin_strategy.linearize_grid(model.h, xb, tl, covs)
+        Q = Q + Of
+        R = R + Oh
     dt = jnp.diff(ts)
     lin = None
     if divergence_correction:

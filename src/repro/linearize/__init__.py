@@ -1,0 +1,54 @@
+"""``repro.linearize`` -- pluggable linearisation strategies.
+
+The iterated nonlinear smoother needs an affine surrogate of the drift
+``f`` and measurement ``h`` at every grid point; this package makes that
+step a strategy (docs/LINEARIZATION.md):
+
+    from repro.linearize import get_linearization
+    lin = get_linearization("unscented")      # or "taylor", an instance, ...
+    A, b, Omega = lin(g, xbar, t, cov)
+
+Built-ins: ``taylor`` (Jacobian, the IEKS default -- bit-exact with the
+pre-subsystem code path), and sigma-point statistical linear regression
+via ``unscented`` / ``cubature`` / ``gauss_hermite`` (derivative-free,
+residual covariance folded into the noise -- the posterior-linearisation
+smoother of arXiv 2102.00514).  Select with
+``IteratedOptions(linearization=...)`` or ``method="sigma_point"``.
+"""
+from .base import (
+    Linearization,
+    get_linearization,
+    linearization_names,
+    register_linearization,
+)
+from .sigma_points import (
+    Cubature,
+    GaussHermite,
+    SigmaPointFamily,
+    SigmaPoints,
+    Unscented,
+    unit_points,
+)
+from .slr import SLR, cubature, gauss_hermite, slr_linearize_point, unscented
+from .taylor import Taylor, taylor_linearize_grid, taylor_linearize_point
+
+__all__ = [
+    "Linearization",
+    "get_linearization",
+    "linearization_names",
+    "register_linearization",
+    "Taylor",
+    "taylor_linearize_point",
+    "taylor_linearize_grid",
+    "SLR",
+    "slr_linearize_point",
+    "unscented",
+    "cubature",
+    "gauss_hermite",
+    "SigmaPointFamily",
+    "SigmaPoints",
+    "Unscented",
+    "Cubature",
+    "GaussHermite",
+    "unit_points",
+]

@@ -1,0 +1,111 @@
+"""The ``Linearization`` strategy protocol and its registry.
+
+A linearisation turns one nonlinear function ``g(x, t)`` into the affine
+surrogate ``g(x, t) ~= A x + b`` about a nominal point, optionally with a
+residual covariance ``Omega`` quantifying the surrogate's error:
+
+    (A, b, Omega) = linearization(g, xbar, t, cov)
+
+``cov`` is the spread the linearisation may average over (statistical
+linear regression); derivative-based strategies ignore it.  ``Omega`` is
+``None`` for exact-at-a-point strategies (Taylor) and a PSD matrix for
+regression strategies -- the grid builder folds it into the process /
+measurement noise (``Q + Omega_f``, ``R + Omega_h``), which is what makes
+posterior-linearisation smoothers well behaved on strongly nonlinear
+models (Yaghoobi et al., arXiv 2102.00514, section 3).
+
+Strategies are frozen dataclasses: hashable (they ride inside the options
+dataclasses into the executable-cache key) and stateless (every method is
+jit/vmap/scan-safe -- sigma-point generation happens host-side on static
+shapes only).  New strategies plug in with :func:`register_linearization`
+and become valid ``IteratedOptions(linearization=...)`` strings without
+touching any call site.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+Array = "jax.Array"
+
+
+@dataclasses.dataclass(frozen=True)
+class Linearization:
+    """Base strategy: affine surrogate of ``g(x, t)`` about a point.
+
+    Subclasses implement :meth:`__call__` (one grid point) and declare
+    ``has_residual``: ``False`` means ``Omega`` is statically ``None``
+    and the grid builder skips the noise augmentation entirely (the
+    Taylor path stays bit-exact with the pre-subsystem code).
+    """
+
+    #: does this strategy produce a residual covariance Omega?
+    has_residual = False
+
+    def __call__(self, g: Callable, x, t, cov=None) -> Tuple:
+        """Linearise ``g`` about ``x`` (spread ``cov``) at time ``t``;
+        returns ``(A, b, Omega)`` with ``Omega`` possibly ``None``."""
+        raise NotImplementedError
+
+    def linearize_grid(self, g: Callable, xb, tl, covs=None):
+        """Vectorised linearisation over a grid of nominal points.
+
+        ``xb`` ``(N, nx)``, ``tl`` ``(N,)``, ``covs`` ``(N, nx, nx)`` (or
+        ``None`` for derivative strategies).  Returns grid arrays
+        ``(A, b, Omega)`` -- ``Omega`` is ``None`` iff ``has_residual``
+        is ``False``.
+        """
+        if covs is None:
+            def one(x, t):
+                return self(g, x, t)
+            return jax.vmap(one)(xb, tl)
+        def one(x, t, c):
+            return self(g, x, t, c)
+        return jax.vmap(one)(xb, tl, covs)
+
+    @property
+    def obs_name(self) -> str:
+        """Metric-taxonomy slug (``linearize.<obs_name>.*``)."""
+        return type(self).__name__.lower()
+
+    def num_points(self, n: int) -> int:
+        """Function evaluations per grid point (1 for derivative
+        strategies; the sigma-point count for regression strategies)."""
+        return 1
+
+
+_LINEARIZATIONS: Dict[str, Callable[[], Linearization]] = {}
+
+
+def register_linearization(name: str, factory: Callable[[], Linearization],
+                           *, overwrite: bool = False) -> None:
+    """Register ``factory`` (zero-arg, returns a :class:`Linearization`)
+    under ``name``, making it a valid ``linearization=`` string."""
+    if name in _LINEARIZATIONS and not overwrite:
+        raise ValueError(f"linearization {name!r} already registered")
+    _LINEARIZATIONS[name] = factory
+
+
+def linearization_names() -> Tuple[str, ...]:
+    return tuple(_LINEARIZATIONS)
+
+
+def get_linearization(spec: "Optional[str | Linearization]") -> Linearization:
+    """Resolve a ``linearization=`` value: ``None`` -> the Taylor default,
+    a registered name -> its default instance, an instance -> itself."""
+    if spec is None:
+        spec = "taylor"
+    if isinstance(spec, Linearization):
+        return spec
+    if isinstance(spec, str):
+        try:
+            return _LINEARIZATIONS[spec]()
+        except KeyError:
+            raise ValueError(
+                f"linearization must be one of {linearization_names()} or a "
+                f"Linearization instance, got {spec!r}") from None
+    raise TypeError(
+        f"linearization must be a str or Linearization instance, got "
+        f"{type(spec).__name__}")

@@ -1,0 +1,51 @@
+"""First-order Taylor linearisation (the paper's section 4.4 path).
+
+Extracted verbatim from the old ``NonlinearSDE.linearise`` so the default
+iterated smoother is bit-exact with the pre-subsystem code:
+``g(x, t) ~= A x + b`` with ``A = jacfwd(g)(xbar)`` and
+``b = g(xbar) - A xbar``.  No residual covariance (``Omega`` is ``None``
+statically), so the grid builder leaves ``Q``/``R`` untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+
+from .base import Linearization, register_linearization
+
+
+def taylor_linearize_point(g: Callable, x, t):
+    """``(A, b)`` of the first-order expansion of ``g`` about ``x``."""
+    A = jax.jacfwd(g, argnums=0)(x, t)
+    b = g(x, t) - A @ x
+    return A, b
+
+
+def taylor_linearize_grid(g: Callable, xb, tl):
+    """Grid Taylor expansion: vmap of :func:`taylor_linearize_point` over
+    the interval left points (``xb`` ``(N, nx)``, ``tl`` ``(N,)``) --
+    the exact computation the solvers linearised with before the
+    subsystem existed."""
+    def lin(x, t):
+        return taylor_linearize_point(g, x, t)
+    return jax.vmap(lin)(xb, tl)
+
+
+@dataclasses.dataclass(frozen=True)
+class Taylor(Linearization):
+    """Jacobian (first-order Taylor) linearisation -- the IEKS default."""
+
+    has_residual = False
+
+    def __call__(self, g: Callable, x, t, cov=None):
+        A, b = taylor_linearize_point(g, x, t)
+        return A, b, None
+
+    def linearize_grid(self, g: Callable, xb, tl, covs=None):
+        A, b = taylor_linearize_grid(g, xb, tl)
+        return A, b, None
+
+
+register_linearization("taylor", Taylor)

@@ -55,8 +55,17 @@ def robust_default_options(method: str):
     mode (exact substep composition -- unconditionally stable, parallel
     == sequential to round-off) and leave ``euler`` opt-in via
     ``options=``.
+
+    Iterated nonlinear methods (``"sigma_point"``) take the ``discrete``
+    mode on their INNER method's options -- the outer options keep their
+    own defaults (iterations, linearisation family).
     """
-    return get_method(method).options_cls(mode="discrete")
+    spec = get_method(method)
+    if spec.nonlinear:
+        outer = spec.options_cls()
+        inner = get_method(outer.inner_method).options_cls(mode="discrete")
+        return outer.replace(inner=inner)
+    return spec.options_cls(mode="discrete")
 
 
 @dataclasses.dataclass

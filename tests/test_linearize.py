@@ -1,0 +1,444 @@
+"""The ``repro.linearize`` subsystem: sigma-point generators, SLR, the
+Taylor extraction (bit-exact with the pre-subsystem path), and
+``method="sigma_point"`` behind ``Estimator.solve`` across layouts and
+inner solvers.  Deterministic counterparts of the hypothesis suite in
+``test_linearize_properties.py`` (which needs hypothesis installed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.obs as obs
+from repro.core import (
+    Estimator,
+    IteratedOptions,
+    ParallelOptions,
+    Problem,
+    SequentialOptions,
+    SigmaPointOptions,
+    get_method,
+    iterated_solve,
+    method_names,
+    simulate_nonlinear,
+    time_grid,
+)
+from repro.core.sde import grid_lqt_from_nonlinear
+from repro.linearize import (
+    SLR,
+    Cubature,
+    GaussHermite,
+    Linearization,
+    Taylor,
+    Unscented,
+    cubature,
+    gauss_hermite,
+    get_linearization,
+    linearization_names,
+    unit_points,
+    unscented,
+)
+
+from helpers import coordinated_turn
+
+FAMILIES = [Unscented(), Unscented(alpha=0.5, kappa=3.0),
+            Cubature(), GaussHermite(order=3), GaussHermite(order=5)]
+
+
+@pytest.fixture(scope="module")
+def ct_problem():
+    model = coordinated_turn()
+    N = 200
+    ts = time_grid(0.0, 5.0, N)
+    xs, y = simulate_nonlinear(model, ts, jax.random.PRNGKey(2))
+    return model, ts, xs, y
+
+
+# ---------------------------------------------------------------------------
+# sigma-point generators
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", FAMILIES, ids=str)
+@pytest.mark.parametrize("n", [1, 2, 5])
+def test_weights_sum_to_one(family, n):
+    pts = unit_points(family, n)
+    assert pts.points.shape == (family.num_points(n), n)
+    np.testing.assert_allclose(np.sum(pts.wm), 1.0, rtol=0, atol=1e-13)
+
+
+@pytest.mark.parametrize("family", FAMILIES, ids=str)
+@pytest.mark.parametrize("n", [1, 2, 5])
+def test_points_reproduce_mean_and_cov(family, n):
+    """Quadrature of x and x x^T over the unit points recovers the
+    standard normal's moments (0, I) to machine precision."""
+    pts = unit_points(family, n)
+    mean = pts.wm @ pts.points
+    np.testing.assert_allclose(mean, np.zeros(n), rtol=0, atol=1e-12)
+    cov = np.einsum("s,si,sj->ij", pts.wc, pts.points, pts.points)
+    np.testing.assert_allclose(cov, np.eye(n), rtol=0, atol=1e-12)
+
+
+def test_generation_is_cached():
+    assert unit_points(Cubature(), 4) is unit_points(Cubature(), 4)
+
+
+def test_unscented_validates():
+    with pytest.raises(ValueError, match="alpha"):
+        Unscented(alpha=0.0)
+    with pytest.raises(ValueError, match="lambda"):
+        unit_points(Unscented(alpha=1.0, kappa=-7.0), 5)
+    with pytest.raises(ValueError, match="order"):
+        GaussHermite(order=0)
+    with pytest.raises(ValueError, match="order"):
+        GaussHermite(order=1)     # one midpoint: no covariance to regress on
+    with pytest.raises(ValueError, match="points"):
+        unit_points(GaussHermite(order=9), 7)
+
+
+# ---------------------------------------------------------------------------
+# SLR regression
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", FAMILIES, ids=str)
+def test_slr_recovers_affine_exactly(family):
+    """SLR of an affine function returns (A, b) exactly and Omega == 0 --
+    the property making SLR == Taylor on linear models."""
+    rng = np.random.default_rng(3)
+    A_true = jnp.asarray(rng.standard_normal((3, 4)))
+    b_true = jnp.asarray(rng.standard_normal(3))
+    cov = jnp.asarray(np.diag(rng.uniform(0.5, 2.0, 4)))
+    m = jnp.asarray(rng.standard_normal(4))
+
+    def g(x, t):
+        return A_true @ x + b_true
+
+    lin = SLR(family)
+    A, b, Omega = lin(g, m, 0.0, cov)
+    np.testing.assert_allclose(A, A_true, rtol=0, atol=1e-11)
+    np.testing.assert_allclose(b, b_true, rtol=0, atol=1e-11)
+    np.testing.assert_allclose(Omega, np.zeros((3, 3)), rtol=0, atol=1e-11)
+
+
+def test_slr_equals_taylor_on_linear_grid(ct_problem):
+    """On a linearised-in-x model the SLR grid build matches the Taylor
+    grid build (Omega == 0 folds in nothing)."""
+    from repro.core import NonlinearSDE
+
+    model, ts, _, y = ct_problem
+    F = jnp.asarray(np.diag([0.9, 0.8, 1.1, 1.0, 0.95]))
+
+    lin_model = NonlinearSDE(
+        f=lambda x, t: F @ x, h=lambda x, t: x[:2],
+        Q=jnp.eye(5) * 1e-3, R=jnp.eye(2) * 1e-2,
+        m0=model.m0, P0=model.P0)
+    xbar = jnp.broadcast_to(lin_model.m0, (y.shape[0] + 1, 5))
+    g_t = grid_lqt_from_nonlinear(lin_model, ts, y, xbar,
+                                  linearization="taylor")
+    g_s = grid_lqt_from_nonlinear(lin_model, ts, y, xbar,
+                                  linearization="cubature")
+    np.testing.assert_allclose(g_s.F, g_t.F, rtol=0, atol=1e-10)
+    np.testing.assert_allclose(g_s.c, g_t.c, rtol=0, atol=1e-10)
+    np.testing.assert_allclose(g_s.H, g_t.H, rtol=0, atol=1e-10)
+    np.testing.assert_allclose(g_s.r, g_t.r, rtol=0, atol=1e-10)
+    np.testing.assert_allclose(g_s.Q, g_t.Q, rtol=1e-10, atol=1e-14)
+    np.testing.assert_allclose(g_s.Rinv, g_t.Rinv, rtol=1e-10, atol=1e-8)
+
+
+def test_slr_requires_cov():
+    lin = cubature()
+    with pytest.raises(ValueError, match="spread covariance"):
+        lin(lambda x, t: x, jnp.zeros(2), 0.0)
+
+
+def test_slr_is_jit_and_vmap_safe():
+    lin = unscented()
+
+    def g(x, t):
+        return jnp.sin(x) * (1.0 + t)
+
+    xb = jnp.asarray(np.random.default_rng(0).standard_normal((7, 3)))
+    tl = jnp.linspace(0.0, 1.0, 7)
+    covs = jnp.broadcast_to(jnp.eye(3), (7, 3, 3))
+    eager = lin.linearize_grid(g, xb, tl, covs)
+    jitted = jax.jit(lambda x, t, c: lin.linearize_grid(g, x, t, c))(
+        xb, tl, covs)
+    for a, b in zip(eager, jitted):
+        np.testing.assert_allclose(a, b, rtol=1e-12, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# registry / options plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_registry_contents():
+    names = linearization_names()
+    for expected in ("taylor", "unscented", "cubature", "gauss_hermite"):
+        assert expected in names
+    assert isinstance(get_linearization(None), Taylor)
+    assert isinstance(get_linearization("unscented"), SLR)
+    inst = gauss_hermite(order=5)
+    assert get_linearization(inst) is inst
+    with pytest.raises(ValueError, match="linearization must be one of"):
+        get_linearization("nope")
+    with pytest.raises(TypeError, match="str or Linearization"):
+        get_linearization(42)
+
+
+def test_iterated_options_resolve_linearization():
+    o = IteratedOptions()
+    assert isinstance(o.linearization, Taylor)
+    o = IteratedOptions(linearization="cubature")
+    assert isinstance(o.linearization, SLR)
+    assert isinstance(o.linearization.family, Cubature)
+    with pytest.raises(ValueError, match="linearization must be one of"):
+        IteratedOptions(linearization="bogus")
+    # options stay hashable (executable-cache key material)
+    assert hash(o) == hash(IteratedOptions(linearization=cubature()))
+
+
+def test_sigma_point_options_validate():
+    o = SigmaPointOptions()
+    assert isinstance(o.linearization, SLR)
+    assert isinstance(o.linearization.family, Unscented)
+    assert o.inner_method == "parallel_rts"
+    with pytest.raises(ValueError, match="inner_method"):
+        SigmaPointOptions(inner_method="")
+    with pytest.raises(ValueError, match="method must be one of"):
+        Estimator(coordinated_turn(), method="sigma_point",
+                  options=SigmaPointOptions(inner_method="bogus"))
+
+
+def test_sigma_point_method_registered():
+    assert "sigma_point" in method_names()
+    spec = get_method("sigma_point")
+    assert spec.nonlinear
+    assert not get_method("parallel_rts").nonlinear
+    with pytest.raises(TypeError, match="not a grid\\s+solver"):
+        spec.solver(None, SigmaPointOptions())
+
+
+def test_sigma_point_requires_nonlinear_model():
+    from repro.core import LinearSDE
+
+    model = LinearSDE(F=jnp.zeros((2, 2)), c=jnp.zeros(2),
+                      H=jnp.eye(2), r=jnp.zeros(2),
+                      Q=jnp.eye(2), R=jnp.eye(2),
+                      m0=jnp.zeros(2), P0=jnp.eye(2))
+    with pytest.raises(TypeError, match="NonlinearSDE"):
+        Estimator(model, method="sigma_point")
+
+
+def test_sigma_point_options_rejected_by_linear_methods():
+    model = coordinated_turn()
+    with pytest.raises(TypeError, match="sigma_point"):
+        Estimator(model, method="parallel_rts",
+                  options=SigmaPointOptions())
+
+
+def test_nested_nonlinear_inner_method_rejected():
+    model = coordinated_turn()
+    with pytest.raises(ValueError, match="itself an"):
+        Estimator(model, method="sigma_point",
+                  options=SigmaPointOptions(inner_method="sigma_point"))
+
+
+# ---------------------------------------------------------------------------
+# Taylor extraction: bit-exact regression
+# ---------------------------------------------------------------------------
+
+
+def test_taylor_default_is_bit_exact(ct_problem):
+    """IteratedOptions(linearization='taylor') (and the default) produce
+    the identical computation graph as before the subsystem existed: the
+    two Estimator paths agree to 0 ULP."""
+    model, ts, _, y = ct_problem
+    problem = Problem.single(model, ts, y)
+    inner = ParallelOptions(nsub=10, mode="discrete")
+    default = Estimator(model, method="parallel_rts",
+                        options=IteratedOptions(inner=inner)).solve(problem)
+    explicit = Estimator(
+        model, method="parallel_rts",
+        options=IteratedOptions(inner=inner,
+                                linearization="taylor")).solve(problem)
+    np.testing.assert_array_equal(np.asarray(default.x),
+                                  np.asarray(explicit.x))
+    np.testing.assert_array_equal(np.asarray(default.cost_trace),
+                                  np.asarray(explicit.cost_trace))
+    # and the engine-room entry point agrees with the Estimator surface
+    spec = get_method("parallel_rts")
+    sol, trace, _ = jax.jit(
+        lambda t, yy: iterated_solve(
+            model, t, yy, lambda g: spec.solver(g, inner),
+            iterations=5, linearization=Taylor()))(ts, y)
+    np.testing.assert_array_equal(np.asarray(default.x), np.asarray(sol.x))
+
+
+def test_sigma_point_with_taylor_equals_ieks(ct_problem):
+    """method='sigma_point' with linearization='taylor' IS the plain
+    IEKS -- same grids, same inner solver, same result."""
+    model, ts, _, y = ct_problem
+    problem = Problem.single(model, ts, y)
+    inner = ParallelOptions(nsub=10, mode="discrete")
+    ieks = Estimator(model, method="parallel_rts",
+                     options=IteratedOptions(inner=inner)).solve(problem)
+    sp = Estimator(
+        model, method="sigma_point",
+        options=SigmaPointOptions(linearization="taylor",
+                                  inner=inner)).solve(problem)
+    np.testing.assert_array_equal(np.asarray(ieks.x), np.asarray(sp.x))
+
+
+# ---------------------------------------------------------------------------
+# method="sigma_point" end-to-end
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("lin", ["unscented", "cubature"])
+def test_sigma_point_cost_not_worse_than_taylor(ct_problem, lin):
+    """Acceptance: on the coordinated-turn model the posterior-
+    linearisation smoother reaches a final OM cost <= the Taylor IEKS at
+    the same iteration count (tiny float slack)."""
+    model, ts, _, y = ct_problem
+    problem = Problem.single(model, ts, y)
+    inner = ParallelOptions(nsub=10, mode="discrete")
+    tay = Estimator(model, method="parallel_rts",
+                    options=IteratedOptions(inner=inner,
+                                            iterations=5)).solve(problem)
+    sp = Estimator(
+        model, method="sigma_point",
+        options=SigmaPointOptions(linearization=lin, inner=inner,
+                                  iterations=5)).solve(problem)
+    t_cost, s_cost = float(tay.cost), float(sp.cost)
+    assert s_cost <= t_cost * (1 + 1e-6), (s_cost, t_cost)
+
+
+@pytest.mark.parametrize("inner_method,inner", [
+    ("parallel_rts", ParallelOptions(nsub=10, mode="discrete")),
+    ("sequential_rts", SequentialOptions(mode="discrete")),
+])
+def test_sigma_point_inner_solvers_agree(ct_problem, inner_method, inner):
+    model, ts, _, y = ct_problem
+    sol = Estimator(
+        model, method="sigma_point",
+        options=SigmaPointOptions(inner_method=inner_method,
+                                  inner=inner)).solve(
+        Problem.single(model, ts, y))
+    assert np.all(np.isfinite(np.asarray(sol.x)))
+    ref = Estimator(
+        model, method="sigma_point",
+        options=SigmaPointOptions(inner=ParallelOptions(
+            nsub=10, mode="discrete"))).solve(Problem.single(model, ts, y))
+    np.testing.assert_allclose(sol.x, ref.x, rtol=1e-7, atol=1e-7)
+
+
+def test_sigma_point_distributed_inner_fallback(ct_problem):
+    """inner_method='distributed' on one device degrades to the parallel
+    scan (fallback='auto') and matches the parallel_rts inner."""
+    from repro.core import DistributedOptions
+
+    model, ts, _, y = ct_problem
+    problem = Problem.single(model, ts, y)
+    dist = Estimator(
+        model, method="sigma_point",
+        options=SigmaPointOptions(
+            inner_method="distributed",
+            inner=DistributedOptions(nsub=10, mode="discrete"))).solve(
+        problem)
+    ref = Estimator(
+        model, method="sigma_point",
+        options=SigmaPointOptions(inner=ParallelOptions(
+            nsub=10, mode="discrete"))).solve(problem)
+    np.testing.assert_allclose(dist.x, ref.x, rtol=1e-10, atol=1e-10)
+
+
+def test_sigma_point_stacked_and_masked(ct_problem):
+    """Stacked layout with a per-record mask: each batch row equals its
+    single-record solve (vmap consistency of the SLR path)."""
+    model, ts, _, y = ct_problem
+    N = y.shape[0]
+    y2 = jnp.stack([y, y[::-1]])
+    mask = jnp.ones((2, N)).at[1, N // 2:].set(0.0)
+    opts = SigmaPointOptions(inner=ParallelOptions(nsub=10,
+                                                   mode="discrete"))
+    est = Estimator(model, method="sigma_point", options=opts)
+    batch = est.solve(Problem.stacked(model, ts, y2,
+                                      measurement_mask=mask))
+    for b in range(2):
+        single = est.solve(Problem.single(model, ts, y2[b],
+                                          measurement_mask=mask[b]))
+        np.testing.assert_allclose(batch.x[b], single.x,
+                                   rtol=1e-9, atol=1e-9)
+
+
+def test_sigma_point_ragged(ct_problem):
+    model, ts, _, y = ct_problem
+    recs = [(ts[:101], y[:100]), (ts[:151], y[:150])]
+    est = Estimator(
+        model, method="sigma_point",
+        options=SigmaPointOptions(inner=ParallelOptions(
+            nsub=10, mode="discrete")))
+    sols = est.solve(Problem.ragged(model, recs))
+    assert len(sols) == 2
+    for (ts_i, y_i), sol in zip(recs, sols):
+        assert sol.x.shape == (y_i.shape[0] + 1, model.nx)
+        assert np.all(np.isfinite(np.asarray(sol.x)))
+
+
+def test_sigma_point_warm_start(ct_problem):
+    """x_init warm-start (the streaming handoff) composes with SLR."""
+    model, ts, _, y = ct_problem
+    est = Estimator(
+        model, method="sigma_point",
+        options=SigmaPointOptions(inner=ParallelOptions(
+            nsub=10, mode="discrete")))
+    cold = est.solve(Problem.single(model, ts, y))
+    warm = est.solve(Problem.single(model, ts, y,
+                                    x_init=cold.x))
+    np.testing.assert_allclose(warm.x, cold.x, rtol=1e-6, atol=1e-6)
+
+
+def test_streaming_engine_sigma_point(ct_problem):
+    """StreamingEngine accepts method='sigma_point' (nonlinear windows
+    carry the linearisation choice through robust_default_options)."""
+    from repro.serving import StreamingEngine
+    from repro.serving.waves import robust_default_options
+
+    opts = robust_default_options("sigma_point")
+    assert isinstance(opts, SigmaPointOptions)
+    assert opts.inner.mode == "discrete"
+
+    model, ts, _, y = ct_problem
+    eng = StreamingEngine(model, lag=8, batch=2, method="sigma_point")
+    tid = eng.open_track(float(ts[0]))
+    eng.push(tid, np.asarray(ts[1:41]), np.asarray(y[:40]))
+    eng.run()
+    sol = eng.estimate(tid)
+    assert sol.x.shape == (41, model.nx)
+    assert np.all(np.isfinite(np.asarray(sol.x)))
+
+
+def test_linearize_obs_counters(ct_problem):
+    from repro.core import ExecutableCache
+
+    model, ts, _, y = ct_problem
+    obs.enable()
+    try:
+        obs.reset()
+        # private cache: the trace-time slr counters fire on compilation,
+        # so the executable must not be reused from an earlier test
+        est = Estimator(
+            model, method="sigma_point",
+            options=SigmaPointOptions(inner=ParallelOptions(
+                nsub=10, mode="discrete")),
+            cache=ExecutableCache())
+        est.solve(Problem.single(model, ts, y))
+        snap = obs.snapshot()
+        counters = snap["counters"]
+        assert counters.get("linearize.unscented.solves", 0) >= 1
+        assert counters.get("linearize.slr.regressions", 0) >= y.shape[0]
+        assert snap["gauges"]["linearize.sigma_points"] == 2 * model.nx + 1
+    finally:
+        obs.disable()
+        obs.reset()

@@ -1,0 +1,86 @@
+"""Hypothesis property tests for the sigma-point generators and SLR.
+
+Randomised counterparts of the deterministic checks in
+``tests/test_linearize.py``: weight normalisation and moment matching
+over the whole valid parameter space of each family, and exact affine
+recovery of SLR (the SLR == Taylor-on-linear-models property) under
+random affine maps, spreads and nominal points.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -e '.[test]')")
+from hypothesis import given, settings, strategies as st
+
+from repro.linearize import (
+    SLR,
+    Cubature,
+    GaussHermite,
+    Unscented,
+    unit_points,
+)
+
+
+def families(max_n):
+    """Strategy over (family, n) pairs valid for state dimension n."""
+    ns = st.integers(min_value=1, max_value=max_n)
+    unscented = st.builds(
+        Unscented,
+        alpha=st.floats(min_value=0.2, max_value=2.0),
+        beta=st.floats(min_value=0.0, max_value=3.0),
+        kappa=st.one_of(st.none(), st.floats(min_value=0.0, max_value=4.0)))
+    cubature = st.just(Cubature())
+    gh = st.builds(GaussHermite, order=st.integers(min_value=2, max_value=4))
+    return st.tuples(st.one_of(unscented, cubature, gh), ns)
+
+
+@settings(max_examples=60, deadline=None)
+@given(families(max_n=4))
+def test_weights_sum_to_one(fam_n):
+    family, n = fam_n
+    pts = unit_points(family, n)
+    assert pts.points.shape == (family.num_points(n), n)
+    np.testing.assert_allclose(np.sum(pts.wm), 1.0, rtol=0, atol=1e-12)
+
+
+@settings(max_examples=60, deadline=None)
+@given(families(max_n=4))
+def test_points_reproduce_standard_moments(fam_n):
+    family, n = fam_n
+    pts = unit_points(family, n)
+    np.testing.assert_allclose(pts.wm @ pts.points, np.zeros(n),
+                               rtol=0, atol=1e-11)
+    cov = np.einsum("s,si,sj->ij", pts.wc, pts.points, pts.points)
+    np.testing.assert_allclose(cov, np.eye(n), rtol=0, atol=1e-10)
+
+
+@settings(max_examples=40, deadline=None)
+@given(families(max_n=3),
+       st.integers(min_value=1, max_value=3),
+       st.floats(min_value=1e-3, max_value=10.0),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_slr_recovers_affine(fam_n, nz, spread, seed):
+    """SLR of an affine g returns its (A, b) exactly and Omega == 0,
+    for every family, output dimension, spread scale and random draw."""
+    family, n = fam_n
+    rng = np.random.default_rng(seed)
+    A_true = jnp.asarray(rng.standard_normal((nz, n)))
+    b_true = jnp.asarray(rng.standard_normal(nz))
+    m = jnp.asarray(rng.standard_normal(n))
+    W = rng.standard_normal((n, n))
+    cov = jnp.asarray(W @ W.T / n + np.eye(n))
+
+    def g(x, t):
+        return A_true @ x + b_true
+
+    A, b, Omega = SLR(family, spread=spread)(g, m, 0.0, cov)
+    scale = max(1.0, float(np.max(np.abs(A_true))))
+    np.testing.assert_allclose(A, A_true, rtol=0, atol=1e-9 * scale)
+    np.testing.assert_allclose(b, b_true, rtol=0,
+                               atol=1e-8 * max(1.0, float(np.max(np.abs(m)))
+                                               * scale))
+    np.testing.assert_allclose(Omega, np.zeros((nz, nz)), rtol=0,
+                               atol=1e-8 * scale ** 2)

@@ -16,7 +16,9 @@ committed ``benchmarks/baselines/BENCH_seed.json`` with
   kern/*    kernel micro-benchmarks
   batch/*   request-axis throughput (problems/sec vs batch size)
   serve/*   TrajectoryEngine tracks/sec + latency percentiles
-  stream/*  StreamingEngine fixed-lag window latency + tracks/sec
+  stream/*  StreamingEngine window latency + tracks/sec: fixed-lag
+            in-order, 10% late pushes through the reorder-slack path
+            (merge/drop accounting), and adaptive-lag self-tuning
   dist/*    method="distributed" weak/strong scaling (subprocess with
             forced host devices -- this process's device count is locked)
 

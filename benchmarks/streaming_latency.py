@@ -11,8 +11,19 @@ waves) twice -- a warmup pass that compiles the per-bucket executables,
 then a measured pass on fresh tracks running entirely on cache hits --
 and reports tracks/sec and windows/sec (measured pass) plus the p50/p99
 of the ``stream.window_latency_seconds`` obs histogram (push-to-solved
-wall time per window; the histogram covers both passes, so p99 exposes
-compile-inflated first-wave latency while p50 reflects steady state).
+wall time per window, diffed per scenario so each row reports its own
+measured pass only).
+
+Three rows:
+
+  stream/fixedlag/*  in-order pushes, fixed lag (the PR-7 baseline path)
+  stream/late/*      10% of measurements delivered one round late into a
+                     ``reorder_slack`` engine -- reports the same latency
+                     percentiles plus merge/drop accounting for the
+                     out-of-order path
+  stream/adaptive/*  ``committed_error_target`` engine self-tuning lag in
+                     ``[lag_min, lag_max]`` -- reports the final lag and
+                     adjustment count
 
     PYTHONPATH=src python benchmarks/streaming_latency.py [--smoke]
 """
@@ -26,6 +37,44 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 import numpy as np
+
+_LAT = "stream.window_latency_seconds"
+
+
+def _lat_counts():
+    """Snapshot of the window-latency histogram bucket counts."""
+    import repro.obs as obs
+
+    if not obs.enabled():
+        return None
+    h = obs.histogram(_LAT)
+    return list(h.counts)
+
+
+def _lat_percentiles(before):
+    """p50/p99 of the latency recorded since ``before`` (count diff)."""
+    import repro.obs as obs
+
+    if before is None or not obs.enabled():
+        return None
+    h = obs.histogram(_LAT)
+    diff = [a - b for a, b in zip(h.counts, before)]
+    total = sum(diff)
+    if total <= 0:
+        return None
+
+    def pct(q):
+        target = q * total
+        seen = 0
+        for i, c in enumerate(diff):
+            if seen + c >= target and c:
+                lo = h.edges[i - 1] if i > 0 else 0.0
+                hi = h.edges[i] if i < len(h.edges) else h.max
+                return lo + (target - seen) / c * (hi - lo)
+            seen += c
+        return h.max
+
+    return pct(0.5), pct(0.99)
 
 
 def _stream_pass(engine, ts, tracks_y, chunk):
@@ -44,6 +93,37 @@ def _stream_pass(engine, ts, tracks_y, chunk):
     return len(tids), windows
 
 
+def _late_pass(engine, ts, tracks_y, chunk, late_frac, seed):
+    """Round-robin pass where ``late_frac`` of each track's measurements
+    are held back and re-offered one round late, merged in time order with
+    the next chunk.  Returns (tracks, windows, offered, merge summary)."""
+    rng = np.random.default_rng(seed)
+    tids = [engine.open_track(ts[0]) for _ in tracks_y]
+    N = tracks_y[0].shape[0]
+    held = [rng.random(N) < late_frac for _ in tracks_y]
+    windows = offered = 0
+    totals = {"merged": 0, "dropped_late": 0}
+    for i in range(0, N + chunk, chunk):
+        rnd = slice(i, min(i + chunk, N))            # this round's chunk
+        prev = slice(max(0, i - chunk), max(0, i))   # last round's holds
+        for tid, y, h in zip(tids, tracks_y, held):
+            idx = np.concatenate([
+                np.nonzero(h[prev])[0] + prev.start,
+                np.nonzero(~h[rnd])[0] + rnd.start,
+            ])
+            idx.sort()
+            if not idx.size:
+                continue
+            res = engine.push(tid, ts[idx + 1], y[idx])
+            offered += idx.size
+            totals["merged"] += res["merged"]
+            totals["dropped_late"] += res["dropped_late"]
+        windows += engine.run()
+    for tid in tids:
+        engine.close(tid)
+    return len(tids), windows, offered, totals
+
+
 def run(smoke=False, seed=0):
     import repro.obs as obs
     from repro.configs.wiener_velocity import WienerVelocityConfig
@@ -59,28 +139,74 @@ def run(smoke=False, seed=0):
     ts = np.linspace(0.0, N / 32.0, N + 1, dtype=np.float32)
     tracks_y = [rng.standard_normal((N, ny)).astype(np.float32)
                 for _ in range(n_tracks)]
+    rows = []
 
+    def derived_common(tracks, windows, dt, before):
+        d = (f"tracks_per_sec={tracks / dt:.1f}"
+             f",windows_per_sec={windows / dt:.1f}")
+        pcts = _lat_percentiles(before)
+        if pcts is not None:
+            d += f",p50_ms={pcts[0] * 1e3:.2f},p99_ms={pcts[1] * 1e3:.2f}"
+        if obs.enabled():
+            d += f",waste={obs.gauge('stream.padding_waste').value:.3f}"
+        return d
+
+    # --- fixed-lag, in-order (PR-7 baseline path) ----------------------
     engine = StreamingEngine(model, lag=lag, batch=batch)
     _stream_pass(engine, ts, tracks_y, chunk)   # warmup: compiles buckets
-
+    before = _lat_counts()
     t0 = time.perf_counter()
     tracks, windows = _stream_pass(engine, ts, tracks_y, chunk)
     dt = time.perf_counter() - t0
-
-    derived = (f"tracks_per_sec={tracks / dt:.1f}"
-               f",windows_per_sec={windows / dt:.1f}")
-    if obs.enabled():
-        lat = obs.histogram("stream.window_latency_seconds").summary()
-        if lat.get("count"):
-            derived += (f",p50_ms={lat['p50'] * 1e3:.2f}"
-                        f",p99_ms={lat['p99'] * 1e3:.2f}")
-        waste = obs.gauge("stream.padding_waste").value
-        derived += f",waste={waste:.3f}"
-    return [{
+    rows.append({
         "name": f"stream/fixedlag/B{batch}_T{n_tracks}_L{lag}",
         "us_per_call": dt / windows * 1e6,
-        "derived": derived,
-    }]
+        "derived": derived_common(tracks, windows, dt, before),
+    })
+
+    # --- 10% late pushes into a reorder-slack engine -------------------
+    # lag alone is shorter than a round, so one-round-late data survives
+    # only because eviction is delayed by ``reorder_slack`` intervals.
+    late_lag, slack, late_frac = max(2, chunk // 2), chunk, 0.10
+    engine = StreamingEngine(model, lag=late_lag, batch=batch,
+                             reorder_slack=slack)
+    _late_pass(engine, ts, tracks_y, chunk, late_frac, seed + 1)  # warmup
+    before = _lat_counts()
+    t0 = time.perf_counter()
+    tracks, windows, offered, totals = _late_pass(
+        engine, ts, tracks_y, chunk, late_frac, seed + 1)
+    dt = time.perf_counter() - t0
+    rows.append({
+        "name": f"stream/late/B{batch}_T{n_tracks}_L{late_lag}_S{slack}",
+        "us_per_call": dt / windows * 1e6,
+        "derived": (derived_common(tracks, windows, dt, before)
+                    + f",late_merged={totals['merged']}"
+                    + f",drop_rate={totals['dropped_late'] / offered:.4f}"),
+    })
+
+    # --- adaptive lag --------------------------------------------------
+    # Self-tuning run: the engine observes the change in about-to-be-
+    # evicted states and walks lag toward the cheapest value meeting the
+    # committed-error target; derived records where it settled.  Uses a
+    # dt=0.1 grid (the model's nominal rate): the fixedlag rows' finer
+    # grid decays too slowly per interval for any feasible lag to meet a
+    # meaningful target.
+    ts_a = np.linspace(0.0, N / 10.0, N + 1, dtype=np.float32)
+    engine = StreamingEngine(model, lag=max(2, chunk // 2), batch=batch,
+                             committed_error_target=0.5,
+                             lag_min=2, lag_max=lag)
+    before = _lat_counts()
+    t0 = time.perf_counter()
+    tracks, windows = _stream_pass(engine, ts_a, tracks_y, chunk)
+    dt = time.perf_counter() - t0
+    rows.append({
+        "name": f"stream/adaptive/B{batch}_T{n_tracks}_Lmax{lag}",
+        "us_per_call": dt / windows * 1e6,
+        "derived": (derived_common(tracks, windows, dt, before)
+                    + f",final_lag={engine.lag}"
+                    + f",lag_adjustments={engine.lag_adjustments}"),
+    })
+    return rows
 
 
 def main() -> None:

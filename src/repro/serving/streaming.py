@@ -25,6 +25,33 @@ window's trajectory (per-row ``x_init``), so the iterated smoother
 re-linearises from an already-converged nominal instead of the prior
 mean.
 
+Late and out-of-order data
+--------------------------
+
+Real feeds deliver measurements late.  ``push`` accepts timestamps
+anywhere relative to the track's grid: in-order points append, points
+that land *inside the live window* are merged in time order and the
+window is re-solved from the unchanged boundary prior (so in-window late
+data costs nothing in exactness -- the prior only summarises evicted
+history), duplicates of existing points follow the engine's
+``duplicate_policy`` (``"error"`` / ``"replace"`` / ``"drop"``), and
+points at or before the committed horizon are counted and dropped
+(``stream.late_drops``).  ``reorder_slack`` keeps that horizon
+``reorder_slack`` intervals further back than the lag -- a per-track
+reorder buffer implemented by delaying eviction, so near-late data still
+merges instead of dropping.
+
+Adaptive lag
+------------
+
+With ``committed_error_target`` set the engine self-tunes ``lag`` inside
+``[lag_min, lag_max]``: every eviction observes how much the
+about-to-be-committed states still moved since their previous solve (the
+smoothing-decay signal) and grows the lag while that residual update
+exceeds the target, shrinks it when the residual is comfortably below --
+converging to the smallest lag that meets the target instead of a
+hand-tuned constant (docs/STREAMING.md has the control law).
+
 Batching
 --------
 
@@ -38,8 +65,8 @@ window pads to the same few bucket lengths.
 
 Observability: with :mod:`repro.obs` enabled the engine reports the
 ``stream.*`` taxonomy (pushes, open tracks, per-wave occupancy/padding,
-``stream.window_latency_seconds`` push-to-solve latency, eviction
-counters) -- see docs/OBSERVABILITY.md.
+``stream.window_latency_seconds`` push-to-solve latency, eviction, late
+and adaptive-lag counters) -- see docs/OBSERVABILITY.md.
 """
 from __future__ import annotations
 
@@ -57,12 +84,23 @@ from repro.core.sde import LinearSDE, NonlinearSDE
 from repro.core.types import Solution
 
 from .waves import (
+    DUPLICATE_POLICIES,
     WaveItem,
+    insert_warm_states,
+    merge_measurements,
     pack_wave,
     record_wave_metrics,
     robust_default_options,
     take_wave,
 )
+
+# Adaptive-lag hysteresis: shrink only when the eviction residual is
+# below this fraction of the target, so the lag settles instead of
+# oscillating between grow and shrink around the threshold.  0.6 keeps
+# the stable band within ~2 intervals of the smallest sufficient lag for
+# smoothing-decay rates down to ~1.3x per interval while still leaving a
+# 1.67x dead zone against residual jitter.
+_LAG_SHRINK_RATIO = 0.6
 
 
 class _Track:
@@ -70,15 +108,18 @@ class _Track:
 
     ``offset`` counts evicted intervals: the live window covers track
     intervals ``[offset, offset + y.shape[0])``.  ``committed_*`` hold the
-    evicted history (``offset`` states); ``win_*`` the window estimate of
-    the last solve; ``prior`` the information-form boundary at the
-    window's left edge (``None`` until the first eviction -- the model
-    prior applies).
+    retained evicted history; ``win_*`` the window estimate of the last
+    solve; ``prior`` the information-form boundary at the window's left
+    edge (``None`` until the first eviction -- the model prior applies).
+    ``seq`` counts data mutations (pushes/merges/replaces) and
+    ``applied_seq`` the last snapshot folded back in, so out-of-order
+    solve results are never applied twice or backwards.
     """
 
     __slots__ = ("ts", "y", "offset", "prior", "x_warm", "win_x", "win_S",
                  "win_v", "committed_x", "committed_S", "committed_v",
-                 "due_since", "solves", "last_cost")
+                 "due_since", "solves", "last_cost", "seq", "applied_seq",
+                 "trimmed", "last_evict_delta")
 
     def __init__(self, t0: float):
         self.ts = np.asarray([t0], dtype=float)
@@ -92,9 +133,17 @@ class _Track:
         self.committed_x: List[np.ndarray] = []
         self.committed_S: List[np.ndarray] = []
         self.committed_v: List[np.ndarray] = []
-        self.due_since = 0.0        # perf_counter of the push that made us due
+        # perf_counter the track last became due.  Initialised to NOW (not
+        # 0.0): a track marked due by any path that forgets to stamp it
+        # must never leak an epoch-relative duration into the
+        # stream.window_latency_seconds histogram.
+        self.due_since = time.perf_counter()
         self.solves = 0
         self.last_cost: Optional[float] = None
+        self.seq = 0                # data mutations (push/merge/replace)
+        self.applied_seq = -1       # seq of the last applied solve snapshot
+        self.trimmed = 0            # committed states dropped by the cap
+        self.last_evict_delta: Optional[float] = None
 
     @property
     def intervals(self) -> int:
@@ -110,9 +159,32 @@ class StreamingEngine:
       lag: window length in INTERVALS kept live behind the newest
         measurement; anything older is evicted as committed history after
         the next solve.  Larger lag = closer to the full MAP for the
-        committed states, more work per re-solve.
+        committed states, more work per re-solve.  With
+        ``committed_error_target`` set this is only the INITIAL lag.
       batch: fixed wave size -- due windows from different tracks are
         solved ``batch`` at a time (compiled once per bucket length).
+      duplicate_policy: what a push whose timestamp exactly matches an
+        existing window grid point does -- ``"error"`` (default: raise),
+        ``"replace"`` (overwrite that measurement and re-solve) or
+        ``"drop"`` (ignore it, counted in ``stream.duplicates_dropped``).
+      reorder_slack: extra intervals (beyond the lag) the window keeps
+        live before committing them -- a per-track reorder buffer that
+        delays eviction so measurements up to ``lag + reorder_slack``
+        intervals behind the newest still merge instead of being dropped
+        at the committed horizon.
+      max_committed_states: optional cap on the retained committed
+        history per track (long-lived tracks otherwise grow without
+        bound).  The OLDEST committed states are trimmed past the cap
+        (``stream.committed_trimmed``); ``committed()`` / ``estimate()``
+        / ``close()`` then return only the retained suffix.
+      committed_error_target: enables adaptive lag.  After each eviction
+        the engine measures how much the evicted states still changed in
+        their final solve (max-abs update vs the previous window solve)
+        and steers ``lag`` within ``[lag_min, lag_max]`` so that residual
+        meets the target: grow while above, shrink while below
+        ``_LAG_SHRINK_RATIO x`` the target.
+      lag_min / lag_max: adaptive-lag bounds (default ``1`` and
+        ``4 * lag``); only meaningful with ``committed_error_target``.
       method / options / mesh / batch_axis: forwarded to the underlying
         :class:`~repro.core.Estimator` (same surface as
         :class:`TrajectoryEngine`; ``options=None`` = method defaults in
@@ -121,17 +193,21 @@ class StreamingEngine:
       diagnostics: forwarded to the Estimator; the streaming default is
         ``False`` (skip cost/step-norm traces -- latency path).
 
-    API: ``open_track(t0) -> id``; ``push(id, ts_new, y_new)`` appends
-    measurements (``ts_new`` strictly increasing, after the track's last
-    time point); ``step()`` solves one wave of due windows; ``run()``
-    drains; ``estimate(id)`` returns the stitched committed + window
-    :class:`Solution`; ``window(id)`` / ``committed(id)`` the parts;
-    ``close(id)`` finalises and removes the track.
+    API: ``open_track(t0) -> id``; ``push(id, ts_new, y_new)`` merges
+    measurements in time order (see the module docstring for late-data
+    semantics) and returns the per-category counts; ``step()`` solves one
+    wave of due windows; ``run()`` drains; ``estimate(id)`` solves any
+    outstanding pushes for that track and returns the stitched committed
+    + window :class:`Solution` (``refresh=False`` skips the solve and
+    returns the last-solved state); ``window(id)`` / ``committed(id)``
+    the parts; ``close(id)`` finalises and removes the track.
 
     ``open_track``/``push``/``estimate``/``collect``-style readers are
     thread-safe; drive ``step``/``run`` from ONE solver thread while
     clients push concurrently (pushes landing mid-solve simply mark the
-    track due again).
+    track due again, and per-track snapshot sequence numbers keep
+    ``estimate``-triggered solves and the solver thread from ever
+    applying a stale window result).
     """
 
     def __init__(
@@ -146,6 +222,12 @@ class StreamingEngine:
         mesh=None,
         batch_axis: str = "data",
         diagnostics: bool = False,
+        duplicate_policy: str = "error",
+        reorder_slack: int = 0,
+        max_committed_states: Optional[int] = None,
+        committed_error_target: Optional[float] = None,
+        lag_min: Optional[int] = None,
+        lag_max: Optional[int] = None,
     ):
         if lag < 1:
             raise ValueError(f"lag must be >= 1 interval, got {lag}")
@@ -157,6 +239,35 @@ class StreamingEngine:
             options = robust_default_options(method)
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
+        if duplicate_policy not in DUPLICATE_POLICIES:
+            raise ValueError(
+                f"duplicate_policy must be one of {DUPLICATE_POLICIES}, "
+                f"got {duplicate_policy!r}")
+        if reorder_slack < 0:
+            raise ValueError(
+                f"reorder_slack must be >= 0 intervals, got {reorder_slack}")
+        if max_committed_states is not None and max_committed_states < 0:
+            raise ValueError(
+                f"max_committed_states must be >= 0 or None, got "
+                f"{max_committed_states}")
+        if committed_error_target is None:
+            if lag_min is not None or lag_max is not None:
+                raise ValueError(
+                    "lag_min/lag_max only apply to adaptive lag -- set "
+                    "committed_error_target to enable it")
+        else:
+            if committed_error_target <= 0:
+                raise ValueError(
+                    f"committed_error_target must be > 0, got "
+                    f"{committed_error_target}")
+            lag_min = 1 if lag_min is None else lag_min
+            lag_max = 4 * lag if lag_max is None else lag_max
+            if lag_min < 1:
+                raise ValueError(f"lag_min must be >= 1, got {lag_min}")
+            if lag_max < lag_min:
+                raise ValueError(
+                    f"lag_max ({lag_max}) must be >= lag_min ({lag_min})")
+            lag = min(max(lag, lag_min), lag_max)
         self.estimator = Estimator(model, method=method, options=options,
                                    mesh=mesh, batch_axis=batch_axis,
                                    diagnostics=diagnostics)
@@ -171,6 +282,13 @@ class StreamingEngine:
         self.batch = batch
         self.bucket_sizes = bucket_sizes
         self.nonlinear = isinstance(model, NonlinearSDE)
+        self.duplicate_policy = duplicate_policy
+        self.reorder_slack = reorder_slack
+        self.max_committed_states = max_committed_states
+        self.committed_error_target = committed_error_target
+        self.lag_min = lag_min
+        self.lag_max = lag_max
+        self.lag_adjustments = 0
 
         self._lock = threading.Lock()
         self._tracks: Dict[int, _Track] = {}
@@ -196,12 +314,18 @@ class StreamingEngine:
             obs.set_gauge("stream.tracks", n)
         return tid
 
-    def push(self, track_id: int, ts_new, y_new) -> None:
-        """Append measurements to a track and mark its window due.
+    def push(self, track_id: int, ts_new, y_new) -> Dict[str, int]:
+        """Merge measurements into a track in time order and mark it due.
 
-        ``ts_new`` (``(K,)``) are the new grid points -- strictly
-        increasing and strictly after the track's current last time --
-        and ``y_new`` (``(K, ny)``) the measurement at each.
+        ``ts_new`` (``(K,)``, strictly increasing within the batch) are
+        grid points anywhere relative to the track: after the last time
+        (append), inside the live window (late merge -- the window is
+        re-solved with them in place), exactly on an existing point
+        (``duplicate_policy`` applies), or at/before the committed
+        horizon (dropped + counted).  ``y_new`` is ``(K, ny)``.
+
+        Returns the per-category counts: ``{"appended", "merged",
+        "replaced", "dropped_late", "dropped_duplicates"}``.
         """
         ts_new = np.asarray(ts_new, dtype=float)
         y_new = np.asarray(y_new)
@@ -222,25 +346,35 @@ class StreamingEngine:
                 f"the model's R is {ny}x{ny} (ny={ny})")
         with self._lock:
             track = self._get(track_id)
-            if ts_new[0] <= track.ts[-1]:
-                raise ValueError(
-                    f"ts_new must start strictly after the track's last "
-                    f"time {track.ts[-1]}; got ts_new[0]={ts_new[0]}")
             if track.y is not None and y_new.shape[1] != track.y.shape[1]:
                 raise ValueError(
                     f"y_new has ny={y_new.shape[1]}, track has "
                     f"ny={track.y.shape[1]}")
-            track.ts = np.concatenate([track.ts, ts_new])
-            track.y = (y_new.copy() if track.y is None
-                       else np.concatenate([track.y, y_new]))
-            if track_id not in self._due:
-                track.due_since = time.perf_counter()
-                self._due[track_id] = None
+            res = merge_measurements(track.ts, track.y, ts_new, y_new,
+                                     duplicate=self.duplicate_policy)
+            track.ts, track.y = res.ts, res.y
+            if res.changed:
+                track.seq += 1
+                if res.merged and track.x_warm is not None:
+                    track.x_warm = insert_warm_states(track.x_warm,
+                                                      res.positions)
+                self._mark_due(track_id, track)
             depth = len(self._due)
         if obs.enabled():
             obs.inc("stream.pushes")
             obs.inc("stream.pushed_intervals", ts_new.shape[0])
             obs.set_gauge("stream.queue_depth", depth)
+            if res.merged:
+                obs.inc("stream.late_merges", res.merged)
+            if res.dropped_late:
+                obs.inc("stream.late_drops", res.dropped_late)
+            if res.replaced:
+                obs.inc("stream.duplicates_replaced", res.replaced)
+            if res.dropped_duplicates:
+                obs.inc("stream.duplicates_dropped", res.dropped_duplicates)
+        return {"appended": res.appended, "merged": res.merged,
+                "replaced": res.replaced, "dropped_late": res.dropped_late,
+                "dropped_duplicates": res.dropped_duplicates}
 
     def due(self) -> int:
         """Number of tracks with un-solved pushes."""
@@ -266,6 +400,12 @@ class StreamingEngine:
             for item in wave:
                 del self._due[item.key]
             depth = len(self._due)
+        self._solve_wave(wave, depth)
+        return len(wave)
+
+    def _solve_wave(self, wave: List[WaveItem], depth: int) -> None:
+        """Solve one snapshotted wave outside the lock and fold the
+        results back in."""
         with obs.trace_span("stream.step"):
             n_pad = wave[0].n_pad
             ts_b, ys_b, mask_b, xi_b, pr_b = pack_wave(wave, self.batch)
@@ -280,7 +420,7 @@ class StreamingEngine:
                 self.waves += 1
             if obs.enabled():
                 record_wave_metrics("stream", wave, n_pad, self.batch, depth)
-        return len(wave)
+                obs.set_gauge("stream.lag", self.lag)
 
     def run(self) -> int:
         """Drain every due window; returns total windows solved.  With
@@ -297,15 +437,26 @@ class StreamingEngine:
 
     # -- estimates ----------------------------------------------------------
 
-    def estimate(self, track_id: int) -> Solution:
+    def estimate(self, track_id: int, *, refresh: bool = True) -> Solution:
         """Stitched committed + window estimate: ``x``/``S``/``v`` over
-        every SOLVED time point of the track (``n_solved + 1`` states).
+        the track's solved time points (all of them, unless
+        ``max_committed_states`` trimmed old history -- then the retained
+        suffix).
+
+        By default the estimate is FRESH: if the track has pushes newer
+        than its last solve, its window is solved on demand first (a
+        single-track wave; concurrent ``step()``/``run()`` callers are
+        safe -- whichever solve lands first wins and the other is
+        discarded by the snapshot sequence check).  ``refresh=False``
+        returns the last-solved state as-is, which silently EXCLUDES any
+        newer pushes -- the fast read for dashboards that poll while a
+        solver thread drains.
 
         ``S``/``v`` are the forward-filter information at each point (the
-        quantity the window handoff chains on); pushes newer than the
-        last solve are not included -- call :meth:`run` first for a
-        fully-refreshed estimate.
+        quantity the window handoff chains on).
         """
+        if refresh:
+            self._refresh(track_id)
         with self._lock:
             track = self._get(track_id)
             if track.win_x is None:
@@ -317,6 +468,20 @@ class StreamingEngine:
                 S=np.concatenate(track.committed_S + [track.win_S]),
                 v=np.concatenate(track.committed_v + [track.win_v]),
                 cost=track.last_cost)
+
+    def _refresh(self, track_id: int) -> None:
+        """Solve ``track_id``'s window now if it has un-solved pushes
+        (one single-track wave, off the FIFO)."""
+        with self._lock:
+            self._get(track_id)
+            if track_id not in self._due:
+                return
+            item = self._snapshot(track_id)
+            del self._due[track_id]
+            depth = len(self._due)
+        if obs.enabled():
+            obs.inc("stream.refresh_solves")
+        self._solve_wave([item], depth)
 
     def window(self, track_id: int) -> Solution:
         """The live window's estimate alone (last solve; ``lag + 1`` states
@@ -330,9 +495,11 @@ class StreamingEngine:
             return Solution(x=track.win_x, S=track.win_S, v=track.win_v)
 
     def committed(self, track_id: int) -> Optional[Solution]:
-        """The evicted (finalised) history as a Solution segment of
-        ``offset`` states, or ``None`` if nothing has been evicted yet.
-        Committed states are never re-solved."""
+        """The evicted (finalised) history as a Solution segment, or
+        ``None`` if nothing has been evicted yet.  Committed states are
+        never re-solved; with ``max_committed_states`` set this is the
+        RETAINED suffix (the oldest states past the cap are gone --
+        ``stream.committed_trimmed`` counts them)."""
         with self._lock:
             track = self._get(track_id)
             if not track.committed_x:
@@ -343,8 +510,8 @@ class StreamingEngine:
 
     def close(self, track_id: int) -> Solution:
         """Finalise a track: solve any outstanding pushes, return the full
-        stitched estimate, and drop the track's state."""
-        self.run()
+        stitched estimate (the retained suffix under
+        ``max_committed_states``), and drop the track's state."""
         final = self.estimate(track_id)
         with self._lock:
             del self._tracks[track_id]
@@ -364,6 +531,14 @@ class StreamingEngine:
             raise KeyError(
                 f"unknown track id {track_id} (open tracks: "
                 f"{sorted(self._tracks)})") from None
+
+    def _mark_due(self, track_id: int, track: _Track) -> None:
+        """Add a track to the due set (caller holds lock), stamping
+        ``due_since`` only on the transition so the latency histogram
+        measures first-unsolved-change to solved."""
+        if track_id not in self._due:
+            track.due_since = time.perf_counter()
+            self._due[track_id] = None
 
     def _snapshot(self, tid: int) -> WaveItem:
         """WaveItem for a due track's current window (caller holds lock).
@@ -388,34 +563,110 @@ class StreamingEngine:
                 x_init = np.broadcast_to(
                     mean, (track.y.shape[0] + 1,) + mean.shape)
         return WaveItem(tid, track.ts, track.y, n_pad, track.due_since,
-                        x_init=x_init, prior=track.prior)
+                        x_init=x_init, prior=track.prior,
+                        seq=track.seq, base=track.offset)
 
     def _apply(self, item: WaveItem, sol: Solution) -> None:
         """Fold one window solution back into its track (caller holds
-        lock): store the window estimate, evict past the lag, advance the
-        boundary prior and warm start."""
+        lock): store the window estimate, evict past the lag (+ reorder
+        slack), advance the boundary prior and warm start, steer the
+        adaptive lag.
+
+        Solve results may land out of order when an ``estimate()``
+        refresh races the solver thread: a result older than the last
+        applied snapshot (``seq``) is discarded, and a newer result whose
+        snapshot predates an eviction is re-based via ``item.base`` so it
+        never double-commits states."""
         track = self._tracks.get(item.key)
         if track is None:                      # closed mid-solve
             return
+        if item.seq <= track.applied_seq:      # a newer solve already landed
+            return
+        track.applied_seq = item.seq
         n = item.y.shape[0]                    # window intervals at snapshot
         x = np.asarray(sol.x)
         S = np.asarray(sol.S)
         v = np.asarray(sol.v)
-        evict = max(0, n - self.lag)
+        # x[i] is the state at absolute interval item.base + i; `shift`
+        # intervals of the snapshot were already committed by an apply
+        # that raced ahead of this one.
+        shift = track.offset - item.base
+        keep = self.lag + self.reorder_slack
+        evict = max(0, (item.base + max(0, n - keep)) - track.offset)
         if evict:
-            track.committed_x.append(x[:evict])
-            track.committed_S.append(S[:evict])
-            track.committed_v.append(v[:evict])
-            track.prior = (S[evict].copy(), v[evict].copy())
+            self._observe_eviction(track, x[shift:shift + evict])
+            track.committed_x.append(x[shift:shift + evict])
+            track.committed_S.append(S[shift:shift + evict])
+            track.committed_v.append(v[shift:shift + evict])
+            track.prior = (S[shift + evict].copy(), v[shift + evict].copy())
             track.ts = track.ts[evict:]
             track.y = track.y[evict:]
             track.offset += evict
             self.evicted_intervals += evict
+            self._trim_committed(track)
             if obs.enabled():
                 obs.inc("stream.evicted_intervals", evict)
         track.win_x, track.win_S, track.win_v = \
-            x[evict:], S[evict:], v[evict:]
-        track.x_warm = x[evict:] if self.nonlinear else None
+            x[shift + evict:], S[shift + evict:], v[shift + evict:]
+        track.x_warm = x[shift + evict:] if self.nonlinear else None
         track.solves += 1
         if sol.cost is not None:
             track.last_cost = float(sol.cost)
+
+    def _observe_eviction(self, track: _Track, evicted_x: np.ndarray) -> None:
+        """Measure the smoothing residual of the states about to be
+        committed -- how much their estimate still changed between the
+        previous solve and this (final) one -- and steer the adaptive lag
+        (caller holds lock).
+
+        ``track.win_x`` covers absolute points ``[offset, ...]`` and
+        ``evicted_x`` the first ``evict`` of exactly those points, so the
+        rows align 1:1.  No previous window (first solve) = no signal.
+        """
+        if track.win_x is None:
+            return
+        k = min(evicted_x.shape[0], track.win_x.shape[0])
+        if k == 0:
+            return
+        delta = float(np.max(np.abs(evicted_x[:k] - track.win_x[:k])))
+        track.last_evict_delta = delta
+        if obs.enabled():
+            obs.record("stream.evict_delta", delta)
+        target = self.committed_error_target
+        if target is None:
+            return
+        old = self.lag
+        if delta > target:
+            self.lag = min(self.lag_max, self.lag + 1)
+        elif delta < target * _LAG_SHRINK_RATIO:
+            self.lag = max(self.lag_min, self.lag - 1)
+        if self.lag != old:
+            self.lag_adjustments += 1
+            if obs.enabled():
+                obs.inc("stream.lag_adjustments")
+                obs.set_gauge("stream.lag", self.lag)
+
+    def _trim_committed(self, track: _Track) -> None:
+        """Enforce ``max_committed_states``: drop the OLDEST committed
+        states past the cap (caller holds lock)."""
+        cap = self.max_committed_states
+        if cap is None:
+            return
+        excess = sum(a.shape[0] for a in track.committed_x) - cap
+        if excess <= 0:
+            return
+        track.trimmed += excess
+        if obs.enabled():
+            obs.inc("stream.committed_trimmed", excess)
+        while excess > 0:
+            head = track.committed_x[0].shape[0]
+            if head <= excess:
+                del track.committed_x[0]
+                del track.committed_S[0]
+                del track.committed_v[0]
+                excess -= head
+            else:
+                track.committed_x[0] = track.committed_x[0][excess:]
+                track.committed_S[0] = track.committed_S[0][excess:]
+                track.committed_v[0] = track.committed_v[0][excess:]
+                excess = 0

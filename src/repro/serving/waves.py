@@ -15,6 +15,10 @@ ONE implementation:
 * :func:`validate_record` -- shared submit-time shape + time-grid checks
   (strictly-increasing ``ts`` -- a non-monotone grid would silently
   extrapolate a broken padded grid, see :func:`repro.core.padding.pad_record`);
+* :func:`merge_measurements` / :func:`insert_warm_states` -- time-ordered
+  merge of a late/out-of-order measurement batch into an existing window
+  series (drop-before-horizon, duplicate policies, in-window insertion),
+  and the matching warm-start-trajectory fix-up;
 * :func:`take_wave` -- FIFO wave selection: the oldest item fixes the
   bucket, later same-bucket items top the wave up (continuous batching);
 * :func:`pack_wave` -- pad + stack a wave into the arrays of one
@@ -76,6 +80,11 @@ class WaveItem:
     optional warm-start trajectory covering the item's real grid
     (``(N+1, nx)``; padded rows repeat the final state).  ``prior`` is an
     optional information-form ``(S0, v0)`` left-boundary override.
+    ``seq``/``base`` identify WHICH revision of a mutable source (a
+    streaming track) was snapshotted: ``seq`` is the source's mutation
+    counter and ``base`` its evicted-interval offset at snapshot time, so
+    an apply can be skipped when a newer solve already landed and sliced
+    correctly when an older one did.
     """
 
     key: int
@@ -85,6 +94,119 @@ class WaveItem:
     submit_t: float = 0.0          # perf_counter at submit; latency readout
     x_init: Optional[np.ndarray] = None
     prior: Optional[Tuple[np.ndarray, np.ndarray]] = None
+    seq: int = 0                   # source mutation counter at snapshot
+    base: int = 0                  # source evicted-interval offset at snapshot
+
+
+@dataclasses.dataclass
+class MergeResult:
+    """Outcome of :func:`merge_measurements`.
+
+    ``ts``/``y`` are the merged series (fresh arrays whenever anything
+    changed -- the inputs are never mutated in place, so snapshots taken
+    before the merge stay valid).  ``positions`` are the insertion points
+    of the kept NEW measurements w.r.t. the ORIGINAL grid (``np.insert``
+    semantics -- feed them to :func:`insert_warm_states` to keep a
+    warm-start trajectory aligned).  The counters partition the offered
+    batch: ``appended`` (after the old last time), ``merged`` (in-window
+    insertions), ``replaced``/``dropped_duplicates`` (duplicate policy),
+    ``dropped_late`` (at or before the horizon -- unrepresentable).
+    """
+
+    ts: np.ndarray
+    y: np.ndarray
+    positions: np.ndarray
+    appended: int = 0
+    merged: int = 0
+    replaced: int = 0
+    dropped_late: int = 0
+    dropped_duplicates: int = 0
+
+    @property
+    def changed(self) -> bool:
+        """True when the series carries new information (re-solve needed)."""
+        return bool(self.appended or self.merged or self.replaced)
+
+
+DUPLICATE_POLICIES = ("error", "replace", "drop")
+
+
+def merge_measurements(ts: np.ndarray, y: Optional[np.ndarray],
+                       ts_new: np.ndarray, y_new: np.ndarray,
+                       *, duplicate: str = "error") -> MergeResult:
+    """Merge a sorted batch of measurements into a window series in time
+    order.
+
+    ``ts`` is the window grid (``(n+1,)``; ``ts[0]`` is the boundary
+    point, measurements sit at ``ts[1:]``) and ``y`` its ``(n, ny)``
+    measurements (``None`` for a fresh track).  ``ts_new`` must be
+    strictly increasing WITHIN the batch but may land anywhere relative
+    to the existing grid:
+
+    * ``t > ts[-1]`` -- appended (the in-order fast path);
+    * ``ts[0] < t < ts[-1]``, not on a grid point -- inserted in time
+      order (an in-window late measurement);
+    * ``t`` exactly on an existing measurement point -- the ``duplicate``
+      policy decides: ``"error"`` raises, ``"replace"`` overwrites that
+      row, ``"drop"`` ignores it;
+    * ``t <= ts[0]`` -- dropped and counted (``ts[0]`` is the committed
+      horizon: everything at or before it is already summarised by the
+      boundary prior and cannot be represented in the window).
+    """
+    if duplicate not in DUPLICATE_POLICIES:
+        raise ValueError(
+            f"duplicate policy must be one of {DUPLICATE_POLICIES}, "
+            f"got {duplicate!r}")
+    ts = np.asarray(ts)
+    ts_new = np.asarray(ts_new, dtype=float)
+    y_new = np.asarray(y_new)
+    n = ts.shape[0]
+
+    late = ts_new <= ts[0]
+    idx = np.searchsorted(ts, ts_new)
+    dup = (idx < n) & (ts[np.minimum(idx, n - 1)] == ts_new) & ~late
+    if dup.any() and duplicate == "error":
+        raise ValueError(
+            f"measurements at {ts_new[dup].tolist()} duplicate existing "
+            "grid points (duplicate_policy='error'; use 'replace' or "
+            "'drop' to accept re-sends)")
+    replaced = 0
+    if dup.any() and duplicate == "replace":
+        y = y.copy()                       # never mutate a snapshotted array
+        y[idx[dup] - 1] = y_new[dup]       # measurement for ts[i] is y[i-1]
+        replaced = int(dup.sum())
+
+    keep = ~late & ~dup
+    positions = idx[keep]
+    if keep.any():
+        merged = int((ts_new[keep] < ts[-1]).sum())
+        ts = np.insert(ts, positions, ts_new[keep])
+        rows = y_new[keep]
+        y = rows.copy() if y is None else np.insert(y, positions - 1, rows,
+                                                    axis=0)
+    else:
+        merged = 0
+    return MergeResult(
+        ts=ts, y=y, positions=positions,
+        appended=int(keep.sum()) - merged, merged=merged, replaced=replaced,
+        dropped_late=int(late.sum()),
+        dropped_duplicates=int(dup.sum()) if duplicate == "drop" else 0)
+
+
+def insert_warm_states(x_warm: np.ndarray,
+                       positions: np.ndarray) -> np.ndarray:
+    """Keep a warm-start trajectory aligned after in-window insertions:
+    each inserted grid point takes its LEFT neighbour's state (the warm
+    start is only a linearisation hint, so a zero-order hold is enough).
+    ``positions`` are original-grid insertion points (``np.insert``
+    semantics, as returned by :func:`merge_measurements`); points past the
+    trajectory's end are ignored -- :func:`_pad_trajectory` repeats the
+    final state over any un-warmed tail."""
+    pos = np.asarray(positions, dtype=int)
+    pos = pos[pos <= x_warm.shape[0] - 1]
+    if pos.size == 0:
+        return x_warm
+    return np.insert(x_warm, pos, x_warm[np.maximum(pos - 1, 0)], axis=0)
 
 
 def validate_record(ts, y) -> Tuple[np.ndarray, np.ndarray]:

@@ -284,8 +284,9 @@ def test_push_validation():
     tid = eng.open_track(ts[0])
     with pytest.raises(ValueError, match="strictly increasing"):
         eng.push(tid, [0.2, 0.1], y[:2])
-    with pytest.raises(ValueError, match="strictly after"):
-        eng.push(tid, [0.0], y[:1])          # not after t0
+    # at/before the track origin: unrepresentable -> counted drop, no error
+    assert eng.push(tid, [0.0], y[:1])["dropped_late"] == 1
+    assert eng.due() == 0                    # a pure drop is not new work
     with pytest.raises(ValueError, match="measurement dimension"):
         eng.push(tid, ts[1:2], np.zeros((1, 3)))
     with pytest.raises(ValueError, match=r"\(K, ny\)"):
@@ -293,8 +294,8 @@ def test_push_validation():
     with pytest.raises(KeyError, match="unknown track"):
         eng.push(99, ts[1:2], y[:1])
     eng.push(tid, ts[1:3], y[:2])
-    with pytest.raises(ValueError, match="strictly after"):
-        eng.push(tid, ts[2:4], y[1:3])       # overlaps the last point
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.push(tid, ts[2:4], y[1:3])       # re-sends the last point
 
 
 def test_estimate_before_solve_raises():
@@ -316,6 +317,116 @@ def test_constructor_validation():
         StreamingEngine(model, lag=0)
     with pytest.raises(ValueError, match="batch"):
         StreamingEngine(model, batch=0)
+    with pytest.raises(ValueError, match="duplicate_policy"):
+        StreamingEngine(model, duplicate_policy="overwrite")
+    with pytest.raises(ValueError, match="reorder_slack"):
+        StreamingEngine(model, reorder_slack=-1)
+    with pytest.raises(ValueError, match="max_committed_states"):
+        StreamingEngine(model, max_committed_states=-1)
+    with pytest.raises(ValueError, match="committed_error_target"):
+        StreamingEngine(model, lag_min=2)        # adaptive knob w/o target
+    with pytest.raises(ValueError, match="committed_error_target"):
+        StreamingEngine(model, committed_error_target=0.0)
+    with pytest.raises(ValueError, match="lag_max"):
+        StreamingEngine(model, committed_error_target=0.1,
+                        lag_min=8, lag_max=4)
+    # adaptive initial lag is clamped into [lag_min, lag_max]
+    eng = StreamingEngine(model, lag=32, committed_error_target=0.1,
+                          lag_min=2, lag_max=8)
+    assert eng.lag == 8
+
+
+# -- satellite regressions -------------------------------------------------
+
+
+def test_estimate_solves_due_tracks_on_demand():
+    """Regression: estimate() used to silently return the STALE window
+    when pushes arrived after the last solve -- committed + win_x simply
+    ignored track.y rows newer than the last step().  It now solves due
+    tracks on demand (and refresh=False documents the old fast read)."""
+    model, ts, y = _linear_data(20)
+    eng = StreamingEngine(model, lag=30, batch=2, options=OPTIONS)
+    tid = eng.open_track(ts[0])
+    eng.push(tid, ts[1:11], y[:10])
+    eng.run()
+    eng.push(tid, ts[11:21], y[10:20])       # due again -- but NO step()
+    stale = eng.estimate(tid, refresh=False)
+    assert stale.x.shape == (11, model.nx)   # the documented fast read
+    fresh = eng.estimate(tid)                # solve-on-demand default
+    assert fresh.x.shape == (21, model.nx)
+    assert eng.due() == 0
+    ref = np.asarray(
+        Estimator(model, options=OPTIONS).solve(
+            Problem.single(model, ts, y)).x)
+    np.testing.assert_allclose(np.asarray(fresh.x), ref, rtol=0,
+                               atol=1e-9 * np.max(np.abs(ref)))
+
+
+def test_max_committed_states_bounds_history():
+    """Regression: committed_x/S/v grew without bound on long-lived
+    tracks.  With max_committed_states the oldest states are trimmed, the
+    trim is counted, and the readers return the retained suffix."""
+    model, ts, y = _linear_data(40)
+    was = obs.enabled()
+    obs.reset()
+    obs.enable()
+    try:
+        cap = 8
+        eng = StreamingEngine(model, lag=5, batch=2, options=OPTIONS,
+                              max_committed_states=cap)
+        ref = StreamingEngine(model, lag=5, batch=2, options=OPTIONS)
+        tid = eng.open_track(ts[0])
+        _stream(eng, tid, ts, y, chunk=7)
+        rid = ref.open_track(ts[0])
+        _stream(ref, rid, ts, y, chunk=7)
+        committed = eng.committed(tid)
+        assert committed.x.shape[0] == cap
+        # the retained suffix equals the unbounded run's suffix exactly
+        full = ref.committed(rid)
+        np.testing.assert_array_equal(committed.x, full.x[-cap:])
+        np.testing.assert_array_equal(committed.S, full.S[-cap:])
+        evicted = full.x.shape[0]
+        assert obs.snapshot()["counters"]["stream.committed_trimmed"] == \
+            evicted - cap
+        # offset still counts ALL evictions; estimate() is suffix + window
+        assert eng._tracks[tid].offset == evicted
+        assert eng.estimate(tid).x.shape[0] == \
+            cap + eng.window(tid).x.shape[0]
+        final = eng.close(tid)
+        assert final.x.shape[0] == cap + (40 - evicted) + 1
+    finally:
+        obs.reset()
+        (obs.enable if was else obs.disable)()
+
+
+def test_due_since_is_push_relative_not_epoch():
+    """Regression: _Track.due_since started as the 0.0 sentinel, so any
+    due-marking path that forgot to stamp it leaked an epoch-relative
+    duration (hours) into stream.window_latency_seconds.  It now starts
+    at open_track time and every due transition re-stamps it."""
+    import time as _time
+
+    model, ts, y = _linear_data(10)
+    eng = StreamingEngine(model, lag=8, batch=2, options=OPTIONS,
+                          duplicate_policy="replace")
+    tid = eng.open_track(ts[0])
+    assert _time.perf_counter() - eng._tracks[tid].due_since < 5.0
+    was = obs.enabled()
+    obs.reset()
+    obs.enable()
+    try:
+        eng.push(tid, ts[1:6], y[:5])
+        eng.run()
+        # mark due via a NON-append path (duplicate replace), then solve
+        eng.push(tid, ts[3:4], y[2:3] + 1.0)
+        assert eng.due() == 1
+        eng.run()
+        lat = obs.histogram("stream.window_latency_seconds").summary()
+        assert lat["count"] == 2
+        assert lat["max"] < 60.0             # sanity: no epoch-scale value
+    finally:
+        obs.reset()
+        (obs.enable if was else obs.disable)()
 
 
 def test_default_options_are_numerically_robust():
@@ -355,6 +466,7 @@ def test_stream_obs_taxonomy():
         assert counters["stream.evicted_intervals"] == 2 * (20 - 8)
         assert snap["gauges"]["stream.tracks"] == 1
         assert "stream.padding_waste" in snap["gauges"]
+        assert snap["gauges"]["stream.lag"] == eng.lag
         hists = snap["histograms"]
         assert hists["stream.window_latency_seconds"]["count"] == 2
         assert "stream.wave_occupancy" in hists

@@ -39,7 +39,11 @@ points at or before the committed horizon are counted and dropped
 (``stream.late_drops``).  ``reorder_slack`` keeps that horizon
 ``reorder_slack`` intervals further back than the lag -- a per-track
 reorder buffer implemented by delaying eviction, so near-late data still
-merges instead of dropping.
+merges instead of dropping.  Merges racing an in-flight solve are safe:
+when the mutation touches the region that solve is about to evict, the
+eviction is deferred to the re-solve the merge itself queued
+(``stream.deferred_evictions``), never sliced off a grid the snapshot no
+longer describes.
 
 Adaptive lag
 ------------
@@ -103,23 +107,35 @@ from .waves import (
 _LAG_SHRINK_RATIO = 0.6
 
 
+def _zoh_resample(x: np.ndarray, snap_ts: np.ndarray,
+                  cur_ts: np.ndarray) -> np.ndarray:
+    """Zero-order-hold resample of a solved trajectory onto a mutated
+    grid: grid points present at solve time keep their state, points
+    merged since take their LEFT neighbour's, points appended since the
+    final state (the same hold as :func:`insert_warm_states` /
+    ``_pad_trajectory`` -- the result is only a warm-start hint)."""
+    idx = np.searchsorted(snap_ts, cur_ts, side="right") - 1
+    return x[np.maximum(idx, 0)]
+
+
 class _Track:
     """Per-track streaming state (mutated only under the engine lock).
 
     ``offset`` counts evicted intervals: the live window covers track
     intervals ``[offset, offset + y.shape[0])``.  ``committed_*`` hold the
     retained evicted history; ``win_*`` the window estimate of the last
-    solve; ``prior`` the information-form boundary at the window's left
-    edge (``None`` until the first eviction -- the model prior applies).
-    ``seq`` counts data mutations (pushes/merges/replaces) and
+    solve (``win_ts`` its time grid, so later merges can be told apart
+    from it); ``prior`` the information-form boundary at the window's
+    left edge (``None`` until the first eviction -- the model prior
+    applies).  ``seq`` counts data mutations (pushes/merges/replaces) and
     ``applied_seq`` the last snapshot folded back in, so out-of-order
     solve results are never applied twice or backwards.
     """
 
     __slots__ = ("ts", "y", "offset", "prior", "x_warm", "win_x", "win_S",
-                 "win_v", "committed_x", "committed_S", "committed_v",
-                 "due_since", "solves", "last_cost", "seq", "applied_seq",
-                 "trimmed", "last_evict_delta")
+                 "win_v", "win_ts", "committed_x", "committed_S",
+                 "committed_v", "due_since", "solves", "last_cost", "seq",
+                 "applied_seq", "trimmed", "last_evict_delta")
 
     def __init__(self, t0: float):
         self.ts = np.asarray([t0], dtype=float)
@@ -130,6 +146,7 @@ class _Track:
         self.win_x: Optional[np.ndarray] = None    # last SOLVED window
         self.win_S: Optional[np.ndarray] = None
         self.win_v: Optional[np.ndarray] = None
+        self.win_ts: Optional[np.ndarray] = None   # time grid of win_x rows
         self.committed_x: List[np.ndarray] = []
         self.committed_S: List[np.ndarray] = []
         self.committed_v: List[np.ndarray] = []
@@ -205,9 +222,14 @@ class StreamingEngine:
     ``open_track``/``push``/``estimate``/``collect``-style readers are
     thread-safe; drive ``step``/``run`` from ONE solver thread while
     clients push concurrently (pushes landing mid-solve simply mark the
-    track due again, and per-track snapshot sequence numbers keep
+    track due again, per-track snapshot sequence numbers keep
     ``estimate``-triggered solves and the solver thread from ever
-    applying a stale window result).
+    applying a stale window result, and a mid-solve merge into the
+    about-to-be-evicted region defers that eviction to the re-solve the
+    merge queued -- ``stream.deferred_evictions`` -- instead of slicing
+    the mutated grid by stale indices).  ``estimate(refresh=True)``
+    waits out an in-flight solve of its track, so the result reflects
+    every push accepted before the call.
     """
 
     def __init__(
@@ -291,6 +313,11 @@ class StreamingEngine:
         self.lag_adjustments = 0
 
         self._lock = threading.Lock()
+        # signalled whenever an in-flight wave lands (or fails): lets
+        # estimate(refresh=True) wait out a solve that snapshotted the
+        # track before the call
+        self._cond = threading.Condition(self._lock)
+        self._inflight: Dict[int, int] = {}   # track id -> solves in flight
         self._tracks: Dict[int, _Track] = {}
         # track id -> insertion order IS the FIFO due order
         self._due: "collections.OrderedDict[int, None]" = \
@@ -362,7 +389,10 @@ class StreamingEngine:
             depth = len(self._due)
         if obs.enabled():
             obs.inc("stream.pushes")
-            obs.inc("stream.pushed_intervals", ts_new.shape[0])
+            # accepted intervals only -- drops (late / duplicate-drop)
+            # are counted by their own stream.* counters below
+            obs.inc("stream.pushed_intervals",
+                    res.appended + res.merged + res.replaced)
             obs.set_gauge("stream.queue_depth", depth)
             if res.merged:
                 obs.inc("stream.late_merges", res.merged)
@@ -399,28 +429,41 @@ class StreamingEngine:
             wave = take_wave(queue, self.batch)
             for item in wave:
                 del self._due[item.key]
+                self._inflight[item.key] = \
+                    self._inflight.get(item.key, 0) + 1
             depth = len(self._due)
         self._solve_wave(wave, depth)
         return len(wave)
 
     def _solve_wave(self, wave: List[WaveItem], depth: int) -> None:
         """Solve one snapshotted wave outside the lock and fold the
-        results back in."""
-        with obs.trace_span("stream.step"):
-            n_pad = wave[0].n_pad
-            ts_b, ys_b, mask_b, xi_b, pr_b = pack_wave(wave, self.batch)
-            sol = self.estimator.solve(
-                Problem.stacked(self.model, ts_b, ys_b,
-                                measurement_mask=mask_b,
-                                x_init=xi_b, prior=pr_b))
+        results back in.  Always clears the wave's in-flight marks and
+        wakes waiting ``estimate(refresh=True)`` callers, even when the
+        solve raises."""
+        try:
+            with obs.trace_span("stream.step"):
+                n_pad = wave[0].n_pad
+                ts_b, ys_b, mask_b, xi_b, pr_b = pack_wave(wave, self.batch)
+                sol = self.estimator.solve(
+                    Problem.stacked(self.model, ts_b, ys_b,
+                                    measurement_mask=mask_b,
+                                    x_init=xi_b, prior=pr_b))
+                with self._lock:
+                    for row, item in enumerate(wave):
+                        self._apply(item, slice_solution(
+                            sol, row, item.y.shape[0]))
+                    self.waves += 1
+                if obs.enabled():
+                    record_wave_metrics("stream", wave, n_pad, self.batch,
+                                        depth)
+                    obs.set_gauge("stream.lag", self.lag)
+        finally:
             with self._lock:
-                for row, item in enumerate(wave):
-                    self._apply(item, slice_solution(
-                        sol, row, item.y.shape[0]))
-                self.waves += 1
-            if obs.enabled():
-                record_wave_metrics("stream", wave, n_pad, self.batch, depth)
-                obs.set_gauge("stream.lag", self.lag)
+                for item in wave:
+                    left = self._inflight.pop(item.key, 1) - 1
+                    if left > 0:
+                        self._inflight[item.key] = left
+                self._cond.notify_all()
 
     def run(self) -> int:
         """Drain every due window; returns total windows solved.  With
@@ -443,14 +486,17 @@ class StreamingEngine:
         ``max_committed_states`` trimmed old history -- then the retained
         suffix).
 
-        By default the estimate is FRESH: if the track has pushes newer
-        than its last solve, its window is solved on demand first (a
-        single-track wave; concurrent ``step()``/``run()`` callers are
-        safe -- whichever solve lands first wins and the other is
-        discarded by the snapshot sequence check).  ``refresh=False``
-        returns the last-solved state as-is, which silently EXCLUDES any
-        newer pushes -- the fast read for dashboards that poll while a
-        solver thread drains.
+        By default the estimate is FRESH: every push accepted before
+        this call is reflected in the result.  A track with un-solved
+        pushes is solved on demand first (a single-track wave), and if a
+        ``step()``/``run()`` solve of this track is already in flight
+        the call WAITS for it to land before re-checking -- a push that
+        arrived mid-solve triggers the on-demand solve; whichever solve
+        lands first wins and the other is discarded by the snapshot
+        sequence check.  ``refresh=False`` returns the last-solved state
+        as-is, which silently EXCLUDES any newer or in-flight pushes --
+        the fast read for dashboards that poll while a solver thread
+        drains.
 
         ``S``/``v`` are the forward-filter information at each point (the
         quantity the window handoff chains on).
@@ -470,15 +516,28 @@ class StreamingEngine:
                 cost=track.last_cost)
 
     def _refresh(self, track_id: int) -> None:
-        """Solve ``track_id``'s window now if it has un-solved pushes
-        (one single-track wave, off the FIFO)."""
+        """Make ``track_id``'s estimate fresh: solve its window now if
+        it has un-solved pushes (one single-track wave, off the FIFO),
+        first waiting out any ``step()``/``run()`` solve of this track
+        already in flight -- a mid-solve track is no longer in the due
+        set, but its result has not landed either, so returning without
+        waiting would silently exclude those pushes."""
         with self._lock:
-            self._get(track_id)
-            if track_id not in self._due:
-                return
-            item = self._snapshot(track_id)
-            del self._due[track_id]
-            depth = len(self._due)
+            while True:
+                self._get(track_id)
+                if track_id in self._due:
+                    item = self._snapshot(track_id)
+                    del self._due[track_id]
+                    self._inflight[track_id] = \
+                        self._inflight.get(track_id, 0) + 1
+                    depth = len(self._due)
+                    break
+                if not self._inflight.get(track_id):
+                    return                 # nothing un-solved or in flight
+                # snapshotted by a solver thread: wait for that wave to
+                # land, then re-check (a push may have arrived mid-solve
+                # and marked the track due again)
+                self._cond.wait()
         if obs.enabled():
             obs.inc("stream.refresh_solves")
         self._solve_wave([item], depth)
@@ -576,7 +635,18 @@ class StreamingEngine:
         refresh races the solver thread: a result older than the last
         applied snapshot (``seq``) is discarded, and a newer result whose
         snapshot predates an eviction is re-based via ``item.base`` so it
-        never double-commits states."""
+        never double-commits states.
+
+        A push landing WHILE this solve was in flight (``track.seq !=
+        item.seq``) may also have mutated the grid itself.  Eviction
+        slices ``track.ts``/``track.y`` by snapshot index, so it only
+        proceeds if the to-be-evicted region of the CURRENT grid still
+        matches the snapshot (mid-solve appends, and merges/replaces past
+        the boundary, keep it intact); a merge or replace inside that
+        region would make the slice drop the wrong points -- and the
+        snapshot solve never saw that data anyway -- so eviction is
+        deferred to the re-solve the mutating push already queued
+        (``stream.deferred_evictions``)."""
         track = self._tracks.get(item.key)
         if track is None:                      # closed mid-solve
             return
@@ -593,8 +663,14 @@ class StreamingEngine:
         shift = track.offset - item.base
         keep = self.lag + self.reorder_slack
         evict = max(0, (item.base + max(0, n - keep)) - track.offset)
+        if evict and track.seq != item.seq and \
+                not self._evict_region_unchanged(track, item, shift, evict):
+            evict = 0
+            if obs.enabled():
+                obs.inc("stream.deferred_evictions")
         if evict:
-            self._observe_eviction(track, x[shift:shift + evict])
+            self._observe_eviction(track, x[shift:shift + evict],
+                                   item.ts[shift:shift + evict])
             track.committed_x.append(x[shift:shift + evict])
             track.committed_S.append(S[shift:shift + evict])
             track.committed_v.append(v[shift:shift + evict])
@@ -608,27 +684,60 @@ class StreamingEngine:
                 obs.inc("stream.evicted_intervals", evict)
         track.win_x, track.win_S, track.win_v = \
             x[shift + evict:], S[shift + evict:], v[shift + evict:]
-        track.x_warm = x[shift + evict:] if self.nonlinear else None
+        track.win_ts = item.ts[shift + evict:]
+        if self.nonlinear:
+            x_warm = x[shift + evict:]
+            if track.seq != item.seq:
+                # mid-solve pushes mutated the grid: re-align the warm
+                # start onto it (a misaligned hint would hand the next
+                # iterated solve neighbouring states at every point past
+                # the first insertion)
+                x_warm = _zoh_resample(x_warm, item.ts[shift + evict:],
+                                       track.ts)
+            track.x_warm = x_warm
+        else:
+            track.x_warm = None
         track.solves += 1
         if sol.cost is not None:
             track.last_cost = float(sol.cost)
 
-    def _observe_eviction(self, track: _Track, evicted_x: np.ndarray) -> None:
+    def _evict_region_unchanged(self, track: _Track, item: WaveItem,
+                                shift: int, evict: int) -> bool:
+        """True when the current grid still matches ``item``'s snapshot
+        over the to-be-evicted region -- the first ``evict + 1`` grid
+        points (boundary included) and their measurements -- so slicing
+        ``track.ts``/``track.y`` by snapshot index is safe even though
+        the track mutated mid-solve (caller holds lock)."""
+        m = evict + 1
+        return (track.ts.shape[0] >= m
+                and bool(np.array_equal(track.ts[:m],
+                                        item.ts[shift:shift + m]))
+                and bool(np.array_equal(track.y[:evict],
+                                        item.y[shift:shift + evict])))
+
+    def _observe_eviction(self, track: _Track, evicted_x: np.ndarray,
+                          evicted_ts: np.ndarray) -> None:
         """Measure the smoothing residual of the states about to be
         committed -- how much their estimate still changed between the
         previous solve and this (final) one -- and steer the adaptive lag
         (caller holds lock).
 
-        ``track.win_x`` covers absolute points ``[offset, ...]`` and
-        ``evicted_x`` the first ``evict`` of exactly those points, so the
-        rows align 1:1.  No previous window (first solve) = no signal.
+        Rows are matched by TIMESTAMP against the previous window
+        (``win_ts``): a late measurement merged since that solve shifts
+        positions, so positional alignment would difference states at
+        DIFFERENT time points.  Points with no previous estimate (just
+        merged) carry no residual signal and are skipped.  No previous
+        window (first solve) = no signal.
         """
         if track.win_x is None:
             return
-        k = min(evicted_x.shape[0], track.win_x.shape[0])
-        if k == 0:
+        prev_ts, prev_x = track.win_ts, track.win_x
+        idx = np.searchsorted(prev_ts, evicted_ts)
+        found = idx < prev_ts.shape[0]
+        found &= prev_ts[np.minimum(idx, prev_ts.shape[0] - 1)] == evicted_ts
+        if not found.any():
             return
-        delta = float(np.max(np.abs(evicted_x[:k] - track.win_x[:k])))
+        delta = float(np.max(np.abs(evicted_x[found] - prev_x[idx[found]])))
         track.last_evict_delta = delta
         if obs.enabled():
             obs.record("stream.evict_delta", delta)

@@ -264,6 +264,57 @@ def test_threaded_push_and_solve():
                                    atol=1e-9 * np.max(np.abs(ref)))
 
 
+def test_estimate_refresh_waits_for_in_flight_solve():
+    """Regression: estimate(refresh=True) returned the PREVIOUS solve's
+    state when a step() had already snapshotted the track and was
+    mid-solve -- the track was no longer due, so _refresh was a no-op
+    and the in-flight pushes were silently excluded (close() inherited
+    the same gap).  It now waits for the in-flight wave to land, then
+    solves anything newer."""
+    model, ts, y = _linear_data(20)
+    eng = StreamingEngine(model, lag=30, batch=1, options=OPTIONS)
+    tid = eng.open_track(ts[0])
+    eng.push(tid, ts[1:6], y[:5])
+    eng.run()
+    entered, release = threading.Event(), threading.Event()
+    real_solve = eng.estimator.solve
+
+    def slow_solve(problem):
+        entered.set()
+        assert release.wait(60.0)
+        return real_solve(problem)
+
+    eng.estimator.solve = slow_solve
+    got = {}
+    try:
+        eng.push(tid, ts[6:11], y[5:10])
+        solver = threading.Thread(target=eng.step)
+        solver.start()
+        assert entered.wait(60.0)            # track snapshotted, mid-solve
+        eng.push(tid, ts[11:21], y[10:20])   # arrives while in flight
+        reader = threading.Thread(
+            target=lambda: got.update(x=np.asarray(eng.estimate(tid).x)))
+        reader.start()
+        reader.join(0.5)
+        assert reader.is_alive(), \
+            "estimate(refresh=True) returned while a solve was in flight"
+        release.set()
+        solver.join(60.0)
+        reader.join(60.0)
+        assert not reader.is_alive()
+    finally:
+        eng.estimator.solve = real_solve
+        release.set()
+    # FRESH: both the in-flight and the mid-solve pushes are included
+    assert got["x"].shape == (21, model.nx)
+    ref = np.asarray(
+        Estimator(model, options=OPTIONS).solve(
+            Problem.single(model, ts, y)).x)
+    np.testing.assert_allclose(got["x"], ref, rtol=0,
+                               atol=1e-9 * np.max(np.abs(ref)))
+    assert not eng._inflight                 # registry drained
+
+
 def test_push_during_solve_marks_due_again():
     model, ts, y = _linear_data(20)
     eng = StreamingEngine(model, lag=8, batch=2, options=OPTIONS)

@@ -206,6 +206,86 @@ def test_late_in_window_push_matches_offline_sigma_point():
     np.testing.assert_allclose(full, ref, rtol=0, atol=1e-5 * scale)
 
 
+# -- mid-solve races -------------------------------------------------------
+
+
+def test_mid_solve_merge_into_evicted_region_is_not_lost():
+    """Regression: a push merging into the about-to-be-evicted region
+    WHILE a solve was in flight used to corrupt the track -- _apply
+    sliced ts/y by snapshot index, so the insertion shifted the window
+    boundary off the stored prior and silently discarded the merged
+    measurement.  The eviction is now deferred to the re-solve the merge
+    itself queued, and the final estimate matches the offline MAP on the
+    complete data."""
+    model, ts, y = _linear_data(40)
+    lag = 8
+    eng = StreamingEngine(model, lag=lag, batch=1, options=OPTIONS)
+    tid = eng.open_track(ts[0])
+    hold = 28                                # y index; time ts[29]
+    mask = np.ones(40, bool)
+    mask[hold] = False
+    eng.push(tid, ts[1:33][mask[:32]], y[:32][mask[:32]])
+    eng.run()                                # horizon ts[23] < ts[29]
+    eng.push(tid, ts[33:], y[32:])           # next solve evicts past ts[29]
+    real_solve = eng.estimator.solve
+    raced = []
+
+    def racing_solve(problem):
+        sol = real_solve(problem)
+        if not raced:                        # once, while "in flight"
+            raced.append(eng.push(tid, ts[hold + 1:hold + 2],
+                                  y[hold:hold + 1]))
+        return sol
+
+    eng.estimator.solve = racing_solve
+    try:
+        eng.step()                           # snapshot predates the merge
+    finally:
+        eng.estimator.solve = real_solve
+    assert raced and raced[0]["merged"] == 1
+    assert eng.due() == 1                    # the merge queued a re-solve
+    eng.run()
+    ref = _offline(model, ts, y)
+    full = np.asarray(eng.estimate(tid).x)
+    assert full.shape == ref.shape           # the merged point survived
+    scale = np.max(np.abs(ref))
+    np.testing.assert_allclose(full[-lag - 1:], ref[-lag - 1:],
+                               rtol=0, atol=1e-9 * scale)
+    track = eng._tracks[tid]
+    assert track.y.shape[0] == lag           # eviction caught up
+    assert track.ts[0] == ts[40 - lag]       # boundary matches the prior
+
+
+def test_evict_residual_matches_rows_by_timestamp():
+    """Regression: the adaptive-lag signal compared evicted states to
+    the previous window POSITIONALLY, so a measurement merged between
+    the two solves shifted rows and the residual differenced states at
+    DIFFERENT time points.  Rows are now matched by timestamp and
+    just-merged points (no previous estimate) are skipped."""
+    model, ts, y = _linear_data(40)
+    eng = StreamingEngine(model, lag=8, batch=1, options=OPTIONS)
+    tid = eng.open_track(ts[0])
+    hold = 16                                # time ts[17]
+    mask = np.ones(24, bool)
+    mask[hold] = False
+    eng.push(tid, ts[1:25][mask], y[:24][mask])
+    eng.run()                                # window grid ts15,ts16,ts18..ts24
+    prev_ts = eng._tracks[tid].ts.copy()
+    prev_x = np.asarray(eng.window(tid).x)
+    eng.push(tid, ts[hold + 1:hold + 2], y[hold:hold + 1])  # merge at pos 2
+    eng.push(tid, ts[25:29], y[24:28])
+    eng.run()                                # evicts ts15..ts19 incl. merged
+    committed = eng.committed(tid)
+    assert committed.x.shape[0] == 20        # 15 + 5 this round
+    prev_index = {t: i for i, t in enumerate(prev_ts)}
+    expected = max(
+        float(np.max(np.abs(committed.x[15 + i] - prev_x[prev_index[t]])))
+        for i, t in enumerate(ts[15:20]) if t in prev_index)
+    assert ts[17] not in prev_index          # merged point has no previous
+    assert eng._tracks[tid].last_evict_delta == pytest.approx(
+        expected, rel=1e-12)
+
+
 # -- committed-horizon drops and the reorder buffer ------------------------
 
 
@@ -331,6 +411,10 @@ def test_late_obs_taxonomy():
         assert c["stream.late_merges"] == 2
         assert c["stream.duplicates_dropped"] == 1
         assert c["stream.late_drops"] == 1
+        # accepted intervals only (28 appended + 2 merged): the dropped
+        # duplicate and the behind-horizon point are NOT counted as
+        # pushed, they have their own counters above
+        assert c["stream.pushed_intervals"] == 30
     finally:
         obs.reset()
         (obs.enable if was else obs.disable)()
